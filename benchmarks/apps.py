@@ -1,0 +1,110 @@
+"""Application-level reproductions: Kyoto Cabinet and LevelDB analogues
+(paper Sections 6.2/6.3), plus the real-thread microbenchmark.
+
+Kyoto (kccachetest wicked): a hash table of S slots, each protected by its
+own lock; random ops hit random slots, so per-lock contention is the total
+load divided by S - the paper's "lower load on each of the multiple slot
+locks" regime.  Simulated as S independent lock instances fed by threads
+that pick a slot uniformly per op (the per-slot arrival process is the
+machine-level process thinned by 1/S, which we model by scaling the
+non-critical section by S).
+
+LevelDB (db_bench readrandom): every Get takes a short *global* snapshot
+lock, then does the search; cache-shard locks absorb the rest.  Modeled as
+one global lock with a short CS and a longer NCS (search) - exactly the
+paper's "contention spread over multiple locks, dominated by the snapshot
+lock when the DB is empty" observation, with the empty-DB variant using a
+near-zero NCS.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Tuple
+
+from repro.core import gcr_wrap, make_lock
+from repro.core.simulator import run_sim
+
+Row = Tuple[str, float, str]
+
+
+def kyoto_analog(n_slots: int = 16) -> List[Row]:
+    rows = []
+    for lock in ["ttas", "mcs_spin", "pthread"]:
+        for wrap in ["", "gcr", "gcr_numa"]:
+            name = f"{wrap}({lock})" if wrap else lock
+            # per-slot load: NCS inflated by slot fan-out
+            r40 = run_sim(name, 40, cs_us=0.8, ncs_us=2.5 * n_slots / 4)
+            r80 = run_sim(name, 80, cs_us=0.8, ncs_us=2.5 * n_slots / 4)
+            total40 = r40.throughput_mops  # per-slot thinning cancels in sum
+            rows.append((f"kyoto/{name}/t40_mops", total40, ""))
+            rows.append((f"kyoto/{name}/t80_mops", r80.throughput_mops, ""))
+    base = run_sim("mcs_spin", 80, cs_us=0.8, ncs_us=10.0).throughput_mops
+    gcr = run_sim("gcr(mcs_spin)", 80, cs_us=0.8,
+                  ncs_us=10.0).throughput_mops
+    assert gcr > 1.5 * base, "GCR gain on Kyoto-like load missing"
+    return rows
+
+
+def leveldb_analog() -> List[Row]:
+    rows = []
+    # populated DB: search dominates (long NCS); empty DB: snapshot lock hot
+    for variant, ncs in [("readrandom", 6.0), ("empty", 1.0)]:
+        for name in ["pthread", "gcr(pthread)", "mcs_spin", "gcr(mcs_spin)",
+                     "gcr_numa(mcs_spin)"]:
+            r = run_sim(name, 80, cs_us=0.5, ncs_us=ncs)
+            rows.append((f"leveldb/{variant}/{name}/t80_mops",
+                         r.throughput_mops, ""))
+    e_base = run_sim("mcs_spin", 80, cs_us=0.5, ncs_us=1.0).throughput_mops
+    e_gcr = run_sim("gcr(mcs_spin)", 80, cs_us=0.5,
+                    ncs_us=1.0).throughput_mops
+    assert e_gcr > 2 * e_base, "empty-DB contention gain missing"
+    return rows
+
+
+def real_threads_microbench(n_threads: int = 8, iters: int = 2000
+                            ) -> List[Row]:
+    """Wall-clock AVL-map-style bench over real Python threads.
+
+    The GIL serializes compute, so absolute numbers mean little; the
+    *relative* behavior (GCR not slower under oversubscription, bounded
+    overhead) is the claim checked here."""
+    rows = []
+
+    def bench(lock) -> float:
+        store = dict((i, i) for i in range(512))
+        ops = [0]
+
+        def work():
+            import random
+            rnd = random.Random(id(threading.current_thread()))
+            for _ in range(iters):
+                k = rnd.randrange(512)
+                lock.acquire()
+                try:
+                    if k % 5 == 0:
+                        store[k] = store.get(k, 0) + 1
+                    else:
+                        _ = store.get(k)
+                    ops[0] += 1
+                finally:
+                    lock.release()
+
+        ts = [threading.Thread(target=work) for _ in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        return ops[0] / dt / 1e3  # kops/s
+
+    base = make_lock("pthread")
+    kbase = bench(base)
+    kgcr = bench(gcr_wrap(make_lock("pthread"), promote_threshold=256))
+    rows.append(("threads/pthread/kops", kbase, ""))
+    rows.append(("threads/gcr(pthread)/kops", kgcr,
+                 f"ratio_{kgcr / max(kbase, 1e-9):.2f}"))
+    assert kgcr > 0.3 * kbase, "real-thread GCR catastrophically slow"
+    return rows

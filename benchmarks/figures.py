@@ -1,0 +1,173 @@
+"""Paper-figure reproductions (one function per figure/table).
+
+All quantitative curves run on the deterministic contention simulator
+(``repro.core.simulator``), which models the paper's X6-2 machine (2 sockets
+x 20 hyperthreads); see DESIGN.md section 2 for why wall-clock Python
+threads cannot reproduce machine-scale numbers on this 1-vCPU container
+(the real-thread GCR implementation is exercised by tests/ and the
+``lock_bench`` example instead).
+
+Each function returns a list of (name, value, derived) rows and asserts the
+paper's qualitative claims so a regression in the mechanism fails loudly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.simulator import MACHINES, X6_2, run_sim
+
+Row = Tuple[str, float, str]
+
+THREADS = [1, 2, 4, 8, 16, 20, 30, 40, 60, 80]
+BASE_LOCKS = ["ttas", "ticket", "mcs_spin", "mcs_stp", "pthread",
+              "malthusian_spin", "malthusian_stp"]
+
+
+def _sweep(locks: List[str], threads=THREADS, **kw) -> Dict[str, List[float]]:
+    return {name: [run_sim(name, n, **kw).throughput_mops for n in threads]
+            for name in locks}
+
+
+def fig1_collapse() -> List[Row]:
+    """Figure 1: scalability collapse of popular locks on X6-2."""
+    data = _sweep(["ttas", "mcs_spin", "mcs_stp"])
+    rows = []
+    for lock, ys in data.items():
+        peak = max(ys)
+        at80 = ys[-1]
+        rows.append((f"fig1/{lock}/peak_mops", peak, ""))
+        rows.append((f"fig1/{lock}/at80_mops", at80,
+                     f"collapse_x{peak / max(at80, 1e-9):.0f}"))
+    # claims: every base lock loses >=2x from peak once oversubscribed
+    for lock, ys in data.items():
+        assert max(ys) / max(ys[-1], 1e-9) > 2.0, f"{lock} did not collapse"
+    # TTAS peaks at few threads then declines (abrupt early drop)
+    ttas = data["ttas"]
+    assert max(ttas[:4]) == max(ttas), "TTAS should peak at <= 8 threads"
+    return rows
+
+
+def fig6_throughput() -> List[Row]:
+    """Figure 6: MCS/TTAS/pthread with GCR and GCR-NUMA."""
+    rows = []
+    for base in ["mcs_spin", "mcs_stp", "ttas", "pthread"]:
+        data = _sweep([base, f"gcr({base})", f"gcr_numa({base})"])
+        for lock, ys in data.items():
+            rows.append((f"fig6/{lock}/at80_mops", ys[-1], ""))
+        base_ys = data[base]
+        gcr_ys = data[f"gcr({base})"]
+        numa_ys = data[f"gcr_numa({base})"]
+        # claim: GCR avoids the oversubscription collapse.  For the parking
+        # mutex the paper's own gains are modest (it already parks), so the
+        # bound is lower there.
+        factor = 1.2 if base == "pthread" else 1.5
+        assert gcr_ys[-1] > factor * base_ys[-1], \
+            f"GCR gain missing for {base}"
+        # claim: GCR-NUMA >= GCR at high thread counts
+        assert numa_ys[-1] > 0.9 * gcr_ys[-1], f"NUMA below GCR for {base}"
+        # claim: below capacity GCR costs little (<= 20% at 8 threads)
+        assert gcr_ys[3] > 0.8 * base_ys[3], f"GCR overhead too big: {base}"
+    return rows
+
+
+def fig7_handoff() -> List[Row]:
+    """Figure 7: lock handoff time stays flat under GCR."""
+    rows = []
+    for base in ["mcs_spin", "ttas"]:
+        for lock in [base, f"gcr({base})"]:
+            h8 = run_sim(lock, 8).avg_handoff_us
+            h80 = run_sim(lock, 80).avg_handoff_us
+            rows.append((f"fig7/{lock}/handoff8_us", h8, ""))
+            rows.append((f"fig7/{lock}/handoff80_us", h80,
+                         f"growth_x{h80 / max(h8, 1e-9):.1f}"))
+        base_growth = (run_sim(base, 80).avg_handoff_us
+                       / max(run_sim(base, 8).avg_handoff_us, 1e-9))
+        gcr_growth = (run_sim(f"gcr({base})", 80).avg_handoff_us
+                      / max(run_sim(f"gcr({base})", 8).avg_handoff_us, 1e-9))
+        assert gcr_growth < base_growth / 4, \
+            f"GCR handoff should stay flat for {base}"
+    return rows
+
+
+def fig8_multi_instance() -> List[Row]:
+    """Figure 8: multiple 40-thread instances sharing the machine.
+
+    Emulated by scaling the per-instance CPU share: with k instances on the
+    machine, each instance sees capacity/k (time-sharing), i.e. the 40
+    threads of one instance run as if on 40/k CPUs."""
+    rows = []
+    for lock in ["mcs_spin", "gcr(mcs_spin)", "gcr_numa(mcs_spin)",
+                 "malthusian_stp"]:
+        for k in [1, 2, 4]:
+            import dataclasses
+            m = dataclasses.replace(
+                X6_2, name=f"X6-2/{k}", cpus_per_socket=X6_2.cpus_per_socket // k)
+            total = k * run_sim(lock, 40, machine=m).throughput_mops
+            rows.append((f"fig8/{lock}/x{k}_total_mops", total, ""))
+    # claim: GCR keeps aggregate throughput within 2x when oversubscribed,
+    # plain MCS collapses
+    import dataclasses
+    m4 = dataclasses.replace(X6_2, cpus_per_socket=X6_2.cpus_per_socket // 4)
+    mcs = 4 * run_sim("mcs_spin", 40, machine=m4).throughput_mops
+    gcr = 4 * run_sim("gcr(mcs_spin)", 40, machine=m4).throughput_mops
+    assert gcr > 10 * mcs, "GCR should win at 4 instances"
+    return rows
+
+
+def fig9_heatmap() -> List[Row]:
+    """Figure 9: GCR / GCR-NUMA speedup over every base lock.
+
+    The bounded-slowdown claim is checked for base locks WITHOUT their own
+    concurrency restriction.  The paper itself reports red (slowdown) cells
+    when GCR fronts locks that already restrict admission ("putting a
+    (non-NUMA-aware) GCR mechanism in front of a NUMA-aware lock is not a
+    good idea"); our Malthusian rows reproduce that emergent interaction,
+    so they are reported but excluded from the bound."""
+    rows = []
+    worst = 10.0
+    for base in BASE_LOCKS:
+        restrictive = base.startswith("malthusian")
+        base_ys = _sweep([base])[base]
+        for wrap in ["gcr", "gcr_numa"]:
+            ys = _sweep([f"{wrap}({base})"])[f"{wrap}({base})"]
+            for n, yb, yw in zip(THREADS, base_ys, ys):
+                sp = yw / max(yb, 1e-9)
+                rows.append((f"fig9/{wrap}({base})/t{n}", sp, ""))
+                if n <= 20 and not restrictive:
+                    worst = min(worst, sp)
+    # claim: sub-capacity slowdown is bounded (paper: mostly < 20%)
+    assert worst > 0.7, f"sub-capacity slowdown too large: {worst:.2f}"
+    return rows
+
+
+def fig11_fairness() -> List[Row]:
+    """Figure 11: unfairness factor (upper-half ops share)."""
+    rows = []
+    kw = dict(duration_us=100_000.0, promote_threshold=512)
+    vals = {}
+    for lock in ["ttas", "gcr(ttas)", "gcr_numa(ttas)", "mcs_spin",
+                 "gcr(mcs_spin)", "pthread", "gcr(pthread)"]:
+        u = run_sim(lock, 32, **kw).unfairness
+        vals[lock] = u
+        rows.append((f"fig11/{lock}/unfairness", u, ""))
+    # claims: TTAS grossly unfair; GCR smooths it; FIFO locks fair
+    assert vals["ttas"] > 0.75, "TTAS should be grossly unfair"
+    assert vals["gcr(ttas)"] < vals["ttas"] - 0.1, "GCR should smooth TTAS"
+    assert vals["gcr_numa(ttas)"] <= vals["gcr(ttas)"] + 0.05
+    assert abs(vals["mcs_spin"] - 0.5) < 0.05, "MCS is FIFO-fair"
+    return rows
+
+
+def table_machines() -> List[Row]:
+    """Cross-machine sanity (X6-2 / X5-4 / T7-2 models): GCR gain holds."""
+    rows = []
+    for mname, m in MACHINES.items():
+        n_over = 2 * m.cpus if m.cpus <= 64 else m.cpus + 64
+        base = run_sim("mcs_spin", n_over, machine=m).throughput_mops
+        gcr = run_sim("gcr(mcs_spin)", n_over, machine=m).throughput_mops
+        rows.append((f"machines/{mname}/mcs_at_{n_over}", base, ""))
+        rows.append((f"machines/{mname}/gcr_at_{n_over}", gcr,
+                     f"speedup_x{gcr / max(base, 1e-9):.0f}"))
+        assert gcr > 2 * base
+    return rows

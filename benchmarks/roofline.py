@@ -1,0 +1,67 @@
+"""Roofline table builder: reads the dry-run artifacts and emits the
+EXPERIMENTS.md section-Roofline table plus CSV rows for benchmarks.run."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+
+Row = Tuple[str, float, str]
+
+
+def load_cells(mesh: str = "16x16") -> List[dict]:
+    d = DRYRUN_DIR / mesh
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def roofline_rows(mesh: str = "16x16") -> List[Row]:
+    rows: List[Row] = []
+    for c in load_cells(mesh):
+        key = f"roofline/{c['arch']}/{c['shape']}"
+        t = c["roofline"]
+        rows.append((f"{key}/compute_s", t["compute_s"], ""))
+        rows.append((f"{key}/memory_s", t["memory_s"], ""))
+        rows.append((f"{key}/collective_s", t["collective_s"],
+                     f"dom={c['dominant'].replace('_s','')}"))
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | dominant |"
+        f" peak GiB/dev | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(mesh):
+        t = c["roofline"]
+        useful = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{c['dominant'].replace('_s', '')} | "
+            f"{c['memory']['temp_bytes'] / 2**30:.2f} | "
+            f"{useful:.2f} |" if useful else
+            f"| {c['arch']} | {c['shape']} | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def summary() -> List[Row]:
+    rows = []
+    for mesh in ["16x16", "2x16x16"]:
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        rows.append((f"dryrun/{mesh}/cells_compiled", len(cells), ""))
+        doms = {}
+        for c in cells:
+            doms[c["dominant"]] = doms.get(c["dominant"], 0) + 1
+        for d, n in sorted(doms.items()):
+            rows.append((f"dryrun/{mesh}/dominant_{d}", n, ""))
+    return rows

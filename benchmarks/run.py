@@ -1,0 +1,64 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Figures 1/6/7/8/9/11 and the Kyoto
+/ LevelDB application analogues run on the deterministic contention
+simulator; the serving bench exercises the L1 GCR admission engine; the
+roofline rows read the dry-run artifacts (run
+``python -m repro.launch.dryrun --all`` first to regenerate those).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import ablation, apps, figures, roofline, serving_bench
+
+    suites = [
+        ("ablation", ablation.knob_sensitivity),
+        ("fig1", figures.fig1_collapse),
+        ("fig6", figures.fig6_throughput),
+        ("fig7", figures.fig7_handoff),
+        ("fig8", figures.fig8_multi_instance),
+        ("fig9", figures.fig9_heatmap),
+        ("fig11", figures.fig11_fairness),
+        ("machines", figures.table_machines),
+        ("kyoto", apps.kyoto_analog),
+        ("leveldb", apps.leveldb_analog),
+        ("threads", apps.real_threads_microbench),
+        ("serving", serving_bench.serving_collapse),
+        ("roofline", roofline.roofline_rows),
+        ("dryrun", roofline.summary),
+    ]
+
+    print("name,value,derived")
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+            for rname, val, derived in rows:
+                print(f"{rname},{val:.6g},{derived}")
+            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},ok",
+                  flush=True)
+        except AssertionError as e:
+            failures.append((name, str(e)))
+            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},"
+                  f"CLAIM_FAILED:{e}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},"
+                  f"ERROR:{e!r}", flush=True)
+    if failures:
+        print(f"# {len(failures)} suite failures: {failures}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving-level scalability collapse and GCR admission (DESIGN.md L1).
+
+The fleet-scale embodiment of the paper: offered concurrent streams sweep
+from under to far over the engine's HBM-limited capacity; without admission
+control throughput collapses (KV thrash), with GCR it holds at peak, and
+GCR-POD adds the pod-locality gain (GCR-NUMA's analogue).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Request, SimServeEngine, make_admission
+
+Row = Tuple[str, float, str]
+
+ACTIVE_LIMIT = 384
+
+
+def _workload(n_streams: int, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt_len=int(rng.integers(256, 1024)),
+                    gen_len=int(rng.integers(64, 256)), pod=i % 2,
+                    arrive_ms=float(rng.uniform(0, 500)))
+            for i in range(n_streams)]
+
+
+def serving_collapse() -> List[Row]:
+    rows = []
+    results = {}
+    for n in [128, 256, 512, 1024, 2048, 4096]:
+        for kind in ["none", "gcr", "gcr_pod"]:
+            adm = make_admission(kind, active_limit=ACTIVE_LIMIT, n_pods=2)
+            res = SimServeEngine(adm).run(_workload(n), max_ms=600_000)
+            results[(kind, n)] = res
+            rows.append((f"serve/{kind}/s{n}_tok_s", res.token_throughput,
+                         ""))
+    # claims (the paper's Figure 6 shape at the serving level)
+    none_peak = max(results[("none", n)].token_throughput
+                    for n in [128, 256, 512])
+    none_over = results[("none", 4096)].token_throughput
+    gcr_over = results[("gcr", 4096)].token_throughput
+    pod_over = results[("gcr_pod", 4096)].token_throughput
+    rows.append(("serve/claims/none_collapse_x",
+                 none_peak / max(none_over, 1e-9), ""))
+    rows.append(("serve/claims/gcr_vs_none_x",
+                 gcr_over / max(none_over, 1e-9), ""))
+    assert none_peak / max(none_over, 1e-9) > 100, "no serving collapse?"
+    assert gcr_over > 0.9 * none_peak, "GCR should hold peak throughput"
+    assert pod_over > gcr_over, "GCR-POD should beat GCR (pod locality)"
+    # fairness: GCR demotions keep long streams from starving the queue
+    r = results[("gcr", 2048)]
+    rows.append(("serve/gcr/s2048_unfairness", r.unfairness, ""))
+    assert r.stats["promotions"] > 0 and r.stats["demotions"] > 0
+    return rows

@@ -1,0 +1,4 @@
+"""repro: GCR (generic concurrency restriction) as a production JAX/TPU
+training + serving framework.  See DESIGN.md."""
+
+__version__ = "1.0.0"

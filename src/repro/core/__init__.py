@@ -1,0 +1,27 @@
+"""GCR - the paper's primary contribution (generic concurrency restriction).
+
+Layers (see DESIGN.md section 2):
+  L0  faithful host-thread algorithm:  ``gcr.GCR``, ``gcr_numa.GCRNuma``,
+      the lock zoo in ``locks``, and the deterministic contention
+      ``simulator`` used for quantitative reproduction of the paper figures.
+  L1  distributed-runtime admission control for serving:
+      ``admission.GCRAdmission`` and the pod-aware ``pod_aware.GCRPod``.
+"""
+
+from .atomics import AtomicInt, AtomicRef
+from .gcr import GCR, gcr_wrap
+from .gcr_numa import GCRNuma, gcr_numa_wrap
+from .locks import LOCKS, make_lock
+from .topology import Topology
+
+__all__ = [
+    "AtomicInt",
+    "AtomicRef",
+    "GCR",
+    "GCRNuma",
+    "LOCKS",
+    "Topology",
+    "gcr_numa_wrap",
+    "gcr_wrap",
+    "make_lock",
+]

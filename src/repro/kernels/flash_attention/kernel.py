@@ -1,0 +1,115 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md hardware-adaptation notes): instead of the CUDA
+warp/SM decomposition, the grid iterates (batch*heads, q_blocks) with an
+inner fori_loop over KV blocks; each (q_block x kv_block) tile does two MXU
+matmuls (scores, probs x V) with the online-softmax running (max, sum)
+carried in VMEM scratch.  Block shapes are MXU-aligned (multiples of 128 on
+the lane dim; q/kv block rows are the sublane-tiled dim).
+
+VMEM working set per program instance:
+    q tile   (BLOCK_Q, D)
+    k/v tile (BLOCK_KV, D) each, streamed over the kv loop
+    acc      (BLOCK_Q, D) f32 + (BLOCK_Q,) running max/sum
+For D=128, BLOCK_Q=256, BLOCK_KV=512: ~0.7 MiB << 128 MiB VMEM, leaving room
+for double buffering of the k/v streams.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
+                      block_q, block_kv, seq_k, q_offset):
+    """One (batch*head, q_block) program instance."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)            # (block_q, D)
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros(q.shape, jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+    n_kv = seq_k // block_kv
+
+    def body(j, carry):
+        m, s, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_kv, block_kv),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * block_kv, block_kv),
+                            slice(None))).astype(jnp.float32)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        if causal:
+            k_pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=1))
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.exp(sc - m_safe[:, None])
+        corr = jnp.exp(jnp.maximum(m, -1e29) - m_safe)
+        s_new = s * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_new = acc * corr[:, None] + pv
+        return m_new, s_new, acc_new
+
+    m, s, acc = jax.lax.fori_loop(0, n_kv, body, (m0, s0, a0))
+    out = acc / jnp.maximum(s, 1e-30)[:, None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_kv: int = DEFAULT_BLOCK_KV,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,T,H,D) -> (B,S,H,D).
+
+    S must divide by block_q, T by block_kv.  Heads/batch are folded into
+    the grid's first axis; each program owns one q tile and streams KV.
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0
+
+    scale = 1.0 / math.sqrt(D)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+
+    grid = (B * H, S // block_q)
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_k=T, q_offset=T - S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, T, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, T, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

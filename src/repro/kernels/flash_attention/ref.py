@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (no chunking tricks)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax.nn
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int = 0) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,T,H,D).  f32 math, materialized scores."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = jnp.arange(S) + (T - S)
+        k_pos = jnp.arange(T)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

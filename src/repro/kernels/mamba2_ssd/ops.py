@@ -1,0 +1,18 @@
+"""Public op: chunked SSD with kernel/reference dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_fwd
+from .ref import ssd_ref
+
+
+def ssd(xdt, a, Bm, Cm, *, chunk: int = 128, impl: str = "auto"):
+    """impl: auto | pallas | interpret | ref."""
+    if impl == "ref":
+        return ssd_ref(xdt, a, Bm, Cm, chunk=chunk)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return ssd_fwd(xdt, a, Bm, Cm, chunk=chunk,
+                   interpret=(impl == "interpret"))

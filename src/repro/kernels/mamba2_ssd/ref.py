@@ -1,0 +1,11 @@
+"""Oracle for the SSD kernel: the model's chunked-jnp implementation."""
+
+from __future__ import annotations
+
+from ...models.mamba2 import ssd_chunked
+
+
+def ssd_ref(xdt, a, Bm, Cm, chunk: int = 128):
+    """xdt: (B,S,H,P) dt-premultiplied inputs; a: (B,S,H) log decays;
+    Bm, Cm: (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    return ssd_chunked(xdt, a, Bm, Cm, chunk=chunk)

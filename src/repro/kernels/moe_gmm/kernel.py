@@ -1,0 +1,69 @@
+"""Grouped (per-expert) matmul as a Pallas TPU kernel.
+
+The MoE hot loop after GCR-style admission: every expert multiplies its
+capacity buffer by its own weights.  Grid = (E, C/bc, F/bf) with an inner
+fori_loop over D/bd tiles accumulating into VMEM scratch - a classic tiled
+MXU matmul with the expert index as the outermost (weight-streaming) axis,
+so each expert's weights are fetched once per (C-tile row sweep).
+
+Block shapes default to (128, 512) x (512, 128) MXU-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_C = 128
+BLOCK_D = 512
+BLOCK_F = 128
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_d - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                             "interpret"))
+def gmm(x, w, *, block_c: int = BLOCK_C, block_d: int = BLOCK_D,
+        block_f: int = BLOCK_F, interpret: bool = False):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    block_c = min(block_c, C)
+    block_d = min(block_d, D)
+    block_f = min(block_f, F)
+    assert C % block_c == 0 and D % block_d == 0 and F % block_f == 0
+    n_d = D // block_d
+
+    grid = (E, C // block_c, F // block_f, n_d)
+    kernel = functools.partial(_gmm_kernel, n_d=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_c, block_d),
+                         lambda e, i, j, kd: (e, i, kd)),
+            pl.BlockSpec((None, block_d, block_f),
+                         lambda e, i, j, kd: (e, kd, j)),
+        ],
+        out_specs=pl.BlockSpec((None, block_c, block_f),
+                               lambda e, i, j, kd: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

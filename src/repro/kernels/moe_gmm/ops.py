@@ -1,0 +1,17 @@
+"""Public op: grouped expert matmul with kernel/reference dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import gmm
+from .ref import gmm_ref
+
+
+def grouped_matmul(x, w, *, impl: str = "auto"):
+    """impl: auto | pallas | interpret | ref."""
+    if impl == "ref":
+        return gmm_ref(x, w)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return gmm(x, w, interpret=(impl == "interpret"))

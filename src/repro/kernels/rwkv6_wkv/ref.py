@@ -1,0 +1,10 @@
+"""Oracle for the WKV kernel: the model's chunked-jnp implementation."""
+
+from __future__ import annotations
+
+from ...models.rwkv6 import wkv_chunked
+
+
+def wkv_ref(r, k, v, w, u, chunk: int = 16):
+    """r,k,v,w: (B,S,H,P); u: (H,P).  Returns (y, final_state (B,H,P,P))."""
+    return wkv_chunked(r, k, v, w, u, chunk=chunk)

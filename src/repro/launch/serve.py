@@ -1,0 +1,66 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the continuous-batching engine with GCR admission over a (reduced)
+model, or the virtual-time fleet engine for capacity planning sweeps.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, get_smoke_config
+from ..models import init_params
+from ..serving.engine import (JaxServeEngine, Request, SimServeEngine,
+                              make_admission)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCHS)
+    ap.add_argument("--admission", default="gcr",
+                    choices=["none", "gcr", "gcr_pod"])
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--fleet-sweep", action="store_true",
+                    help="virtual-time capacity sweep instead of the "
+                         "real-model engine")
+    ap.add_argument("--active-limit", type=int, default=384)
+    args = ap.parse_args()
+
+    if args.fleet_sweep:
+        rng = np.random.default_rng(0)
+        print(f"{'streams':>8} {'tok/s':>10} {'p50ms':>8} {'done':>6}")
+        for n in [256, 1024, 4096]:
+            adm = make_admission(args.admission, args.active_limit, n_pods=2)
+            reqs = [Request(rid=i, prompt_len=int(rng.integers(256, 1024)),
+                            gen_len=int(rng.integers(64, 256)), pod=i % 2,
+                            arrive_ms=float(rng.uniform(0, 500)))
+                    for i in range(n)]
+            res = SimServeEngine(adm).run(reqs, max_ms=600_000)
+            print(f"{n:>8} {res.token_throughput:>10,.0f} "
+                  f"{res.p50_latency_ms:>8.0f} {res.completed:>6}")
+        return
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    eng = JaxServeEngine(cfg, params, n_slots=args.slots,
+                         max_len=args.prompt_len + args.gen_len + 4,
+                         admission_kind=args.admission)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.streams, args.prompt_len)).astype(np.int32)
+    out = eng.generate(prompts, gen_len=args.gen_len)
+    print(f"arch={cfg.name} streams={args.streams} slots={args.slots} "
+          f"admission={args.admission}")
+    print(f"fast admits: {eng.admission.stat_fast}  "
+          f"parked: {getattr(eng.admission, 'stat_parked', 0)}")
+    for i in range(min(3, args.streams)):
+        print(f"stream {i}: {out[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

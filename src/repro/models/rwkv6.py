@@ -1,0 +1,245 @@
+"""RWKV6 "Finch" block [arXiv:2404.05892], pure JAX.
+
+Time mixing is a gated linear recurrence with *data-dependent per-channel
+decay* ``w_t`` (the Finch novelty) and a bonus ``u`` for the current token:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state per head: K x V)
+    y_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+Training/prefill uses the chunked (intra-chunk quadratic + inter-chunk state
+carry) formulation; ``decode_step`` is the O(1) recurrence.  The Pallas
+kernel in ``repro.kernels.rwkv6`` implements the same chunked dataflow.
+
+Channel mixing is the squared-ReLU MLP of the RWKV family.  Token shift
+(lerp with the previous timestep) is applied in both mixers; the shift state
+is carried in the cache for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+# Chunk length for the chunked WKV form.  16 keeps the within-chunk decay
+# range representable in f32 even for the strongest admissible decays (see
+# MAX_DECAY_RATE below): |log prod w| <= 16 * 5 = 80 < log(f32_max) ~ 88.
+CHUNK = 16
+LORA_DIM = 64
+# Per-step decay exponent cap: w_t = exp(-exp(dlog)) with exp(dlog) <= 5,
+# i.e. w >= exp(-5) ~ 6.7e-3.  (Real RWKV6 decays are far milder; the cap
+# only guards the chunked form's 1/prod(w) factors.)
+MAX_DECAY_RATE = 5.0
+
+
+def rwkv6_params(key, d_model: int, d_ff: int, n_heads: int,
+                 head_dim: int, dtype) -> Dict:
+    ks = jax.random.split(key, 12)
+    D = d_model
+    return {
+        # time mix
+        "mu_r": jnp.full((D,), 0.5, dtype),
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_v": jnp.full((D,), 0.5, dtype),
+        "mu_w": jnp.full((D,), 0.5, dtype),
+        "mu_g": jnp.full((D,), 0.5, dtype),
+        "w_r": dense_init(ks[0], D, D, dtype),
+        "w_k": dense_init(ks[1], D, D, dtype),
+        "w_v": dense_init(ks[2], D, D, dtype),
+        "w_g": dense_init(ks[3], D, D, dtype),
+        "w_o": dense_init(ks[4], D, D, dtype),
+        # data-dependent decay (LoRA): w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((D,), -3.0, jnp.float32),
+        "decay_A": dense_init(ks[5], D, LORA_DIM, dtype),
+        "decay_B": dense_init(ks[6], LORA_DIM, D, dtype),
+        "bonus_u": jnp.zeros((n_heads, head_dim), jnp.float32),
+        "ln_x_w": jnp.ones((D,), dtype),   # per-head group norm weight
+        # channel mix
+        "mu_ck": jnp.full((D,), 0.5, dtype),
+        "mu_cr": jnp.full((D,), 0.5, dtype),
+        "c_k": dense_init(ks[7], D, d_ff, dtype),
+        "c_v": dense_init(ks[8], d_ff, D, dtype),
+        "c_r": dense_init(ks[9], D, D, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} sequence; prev: (B,1,D) last token of the previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                w: jnp.ndarray, u: jnp.ndarray,
+                init_state: Optional[jnp.ndarray] = None,
+                chunk: int = CHUNK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV recurrence.
+
+    r,k,v: (B,S,H,P); w: (B,S,H,P) per-channel decay in (0,1); u: (H,P).
+    Returns (y (B,S,H,P), final_state (B,H,P,P)) with state[k_dim, v_dim].
+    All math in f32 (decay products are precision-sensitive).
+    """
+    B, S, H, P = r.shape
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+
+    rc = r.reshape(B, nc, chunk, H, P)
+    kc = k.reshape(B, nc, chunk, H, P)
+    vc = v.reshape(B, nc, chunk, H, P)
+    wc = w.reshape(B, nc, chunk, H, P)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-8))
+    cum = jnp.cumsum(logw, axis=2)                    # inclusive cumlog decay
+    b_incl = jnp.exp(cum)                             # prod_{s<=t} w_s
+    b_excl = jnp.exp(cum - logw)                      # prod_{s<t}  w_s
+    b_last = jnp.exp(cum[:, :, -1])                   # (B,nc,H,P)
+
+    # intra-chunk: S_{i-1} holds k_j v_j decayed by b_excl_i / b_incl_j, so
+    # score(i,j) = (r_i * b_excl_i) . (k_j / b_incl_j)  for j < i
+    r_t = rc * b_excl
+    k_t = kc / jnp.maximum(b_incl, 1e-37)
+    scores = jnp.einsum("bcihp,bcjhp->bchij", r_t, k_t)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    # bonus diagonal (current token)
+    diag = jnp.einsum("bcihp,bcihp->bcih", rc * u[None, None], kc)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, vc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: y_i += (r_i * b_excl_i) @ S_prev
+    # state update: S_new = diag(b_last) S_prev + sum_j diag(b_last/b_incl_j) k_j v_j^T
+    per_chunk_state = jnp.einsum("bcjhp,bcjhq->bchpq",
+                                 kc / jnp.maximum(b_incl, 1e-37), vc)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, P), f32)
+
+    def step(s_prev, inp):
+        st, bl = inp                                  # (B,H,P,P), (B,H,P)
+        s_new = (s_prev + st) * bl[..., None]
+        return s_new, s_prev
+
+    final_state, states_in = jax.lax.scan(
+        step, init_state,
+        (per_chunk_state.transpose(1, 0, 2, 3, 4),
+         b_last.transpose(1, 0, 2, 3)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)    # (B,nc,H,P,P)
+
+    y_inter = jnp.einsum("bcihp,bchpq->bcihq", r_t, states_in)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, final_state
+
+
+def _group_norm_heads(x: jnp.ndarray, weight: jnp.ndarray, n_heads: int,
+                      eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head LayerNorm (RWKV's ln_x)."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, n_heads, D // n_heads).astype(jnp.float32)
+    mean = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    y = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, D) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv6_time_mix(
+    p: Dict, x: jnp.ndarray, *, n_heads: int, head_dim: int,
+    shift_state: Optional[jnp.ndarray] = None,
+    wkv_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """x: (B,S,D).  Returns output and, optionally, (shift, wkv) states."""
+    B, S, D = x.shape
+    xs = _token_shift(x, shift_state)
+    xr = _lerp(x, xs, p["mu_r"])
+    xk = _lerp(x, xs, p["mu_k"])
+    xv = _lerp(x, xs, p["mu_v"])
+    xw = _lerp(x, xs, p["mu_w"])
+    xg = _lerp(x, xs, p["mu_g"])
+
+    r = (xr @ p["w_r"]).reshape(B, S, n_heads, head_dim)
+    k = (xk @ p["w_k"]).reshape(B, S, n_heads, head_dim)
+    v = (xv @ p["w_v"]).reshape(B, S, n_heads, head_dim)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    # data-dependent decay (Finch): w in (0,1) per channel
+    dlog = p["decay_w0"] + (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+                            ).astype(jnp.float32)
+    rate = jnp.minimum(jnp.exp(dlog), MAX_DECAY_RATE)
+    w = jnp.exp(-rate).reshape(B, S, n_heads, head_dim)
+
+    u = p["bonus_u"]
+    y, final_wkv = wkv_chunked(r, k, v, w, u, init_state=wkv_state)
+    y = _group_norm_heads(y.reshape(B, S, D).astype(x.dtype), p["ln_x_w"],
+                          n_heads)
+    out = (y * g) @ p["w_o"]
+    if return_state:
+        return out, x[:, -1:], final_wkv
+    return out
+
+
+def rwkv6_channel_mix(
+    p: Dict, x: jnp.ndarray,
+    shift_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    xs = _token_shift(x, shift_state)
+    xk = _lerp(x, xs, p["mu_ck"])
+    xr = _lerp(x, xs, p["mu_cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["c_k"]))
+    out = jax.nn.sigmoid(xr @ p["c_r"]) * (k @ p["c_v"])
+    if return_state:
+        return out, x[:, -1:]
+    return out
+
+
+def rwkv6_time_mix_step(p, x, shift_state, wkv_state, *, n_heads, head_dim):
+    """O(1) recurrent step.  x: (B,1,D)."""
+    B, _, D = x.shape
+    xs = shift_state
+    xr = _lerp(x, xs, p["mu_r"])
+    xk = _lerp(x, xs, p["mu_k"])
+    xv = _lerp(x, xs, p["mu_v"])
+    xw = _lerp(x, xs, p["mu_w"])
+    xg = _lerp(x, xs, p["mu_g"])
+
+    f32 = jnp.float32
+    r = (xr @ p["w_r"]).reshape(B, n_heads, head_dim).astype(f32)
+    k = (xk @ p["w_k"]).reshape(B, n_heads, head_dim).astype(f32)
+    v = (xv @ p["w_v"]).reshape(B, n_heads, head_dim).astype(f32)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    dlog = p["decay_w0"] + (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+                            ).astype(f32)
+    rate = jnp.minimum(jnp.exp(dlog), MAX_DECAY_RATE)
+    w = jnp.exp(-rate).reshape(B, n_heads, head_dim)
+
+    kv = k[..., :, None] * v[..., None, :]            # (B,H,P,P)
+    y = jnp.einsum("bhp,bhpq->bhq",
+                   r * p["bonus_u"][None], kv) \
+        + jnp.einsum("bhp,bhpq->bhq", r, wkv_state.astype(f32))
+    new_state = wkv_state.astype(f32) * w[..., None] + kv
+
+    y = y.reshape(B, 1, D).astype(x.dtype)
+    y = _group_norm_heads(y, p["ln_x_w"], n_heads)
+    out = (y * g) @ p["w_o"]
+    return out, x, new_state.astype(wkv_state.dtype)
+
+
+def rwkv6_channel_mix_step(p, x, shift_state):
+    xs = shift_state
+    xk = _lerp(x, xs, p["mu_ck"])
+    xr = _lerp(x, xs, p["mu_cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["c_k"]))
+    out = jax.nn.sigmoid(xr @ p["c_r"]) * (k @ p["c_v"])
+    return out, x

@@ -1,0 +1,6 @@
+"""Optimizers and distributed-optimization tricks."""
+
+from .adamw import adamw_init, adamw_update
+from .schedules import cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule"]

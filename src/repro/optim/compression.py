@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback (cross-pod hop).
+
+Distributed-optimization trick for the slow inter-pod link: gradients are
+quantized to int8 with a per-tensor scale before the cross-pod reduction
+and the quantization error is fed back into the next step (error-feedback
+keeps SGD/Adam convergence unbiased in expectation).
+
+Intended placement (see parallel/collectives.py): reduce-scatter full
+precision *inside* a pod (fast ICI), quantize only the pod-level partial
+sums for the DCN all-reduce across pods, dequantize, all-gather.  8x less
+cross-pod traffic for the dominant term of hierarchical grad sync.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(grads, error_state):
+    """Returns ((q, scale) tree, new_error_state).
+
+    new_error = (g + error) - dequant(quant(g + error))
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return (q, scale), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    etree = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return qtree, etree
+
+
+def decompress(qtree):
+    def is_leaf(x):
+        return isinstance(x, tuple) and len(x) == 2
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), qtree,
+                        is_leaf=is_leaf)

@@ -1,0 +1,70 @@
+"""Hierarchical gradient synchronization (shard_map) + compressed cross-pod
+hop.
+
+``hierarchical_grad_sync`` implements the multi-pod reduction the mesh was
+designed for (DESIGN.md section 5):
+
+    1. reduce-scatter over ``data``   (fast intra-pod ICI)
+    2. all-reduce      over ``pod``   (slow inter-pod link - optionally
+                                       int8-compressed with error feedback)
+    3. all-gather      over ``data``  (intra-pod)
+
+vs. a flat all-reduce over (pod, data), this moves 1/data of the bytes over
+the slow link.  Exposed standalone (shard_map) so the benchmarks can lower
+both variants and compare collective bytes on the pod axis; inside the
+jitted train step, XLA's partitioner already picks the hierarchical
+schedule from the mesh topology, so the default path stays pjit-native.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..optim.compression import dequantize_int8, quantize_int8
+
+
+def _sync_one(g, *, compress: bool):
+    # 1. intra-pod reduce-scatter over 'data' (tiled on leading axis)
+    g = jax.lax.psum_scatter(g, "data", scatter_dimension=0, tiled=True)
+    # 2. cross-pod all-reduce (optionally int8)
+    if compress:
+        q, scale = quantize_int8(g)
+        qsum = jax.lax.psum(q.astype(jnp.int32), "pod")
+        ssum = jax.lax.psum(scale, "pod")  # conservative shared scale
+        g = (qsum.astype(jnp.float32) * (ssum / jax.lax.psum(1.0, "pod"))
+             ).astype(g.dtype)
+    else:
+        g = jax.lax.psum(g, "pod")
+    # 3. intra-pod all-gather
+    return jax.lax.all_gather(g, "data", axis=0, tiled=True)
+
+
+def hierarchical_grad_sync(grads: Any, mesh: Mesh,
+                           compress: bool = False) -> Any:
+    """grads: pytree of per-device partial gradients laid out with batch
+    sharded over ('pod','data').  Returns fully-summed gradients.
+
+    Leaves whose leading dim does not divide the data axis fall back to a
+    plain psum over both axes."""
+    data = mesh.shape["data"]
+
+    def sync(g):
+        if g.ndim >= 1 and g.shape[0] % data == 0:
+            return _sync_one(g, compress=compress)
+        out = jax.lax.psum(g, "data")
+        return jax.lax.psum(out, "pod")
+
+    fn = shard_map(
+        lambda t: jax.tree.map(sync, t),
+        mesh=mesh,
+        in_specs=P(),            # grads replicated per (pod,data) pair...
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(grads)

@@ -1,0 +1,5 @@
+from .fault_tolerance import (ElasticPlan, HeartbeatMonitor, RecoveryPlan,
+                              StragglerMitigator, plan_elastic_mesh)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "RecoveryPlan",
+           "StragglerMitigator", "plan_elastic_mesh"]

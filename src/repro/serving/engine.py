@@ -1,0 +1,283 @@
+"""Continuous-batching serving engine with GCR admission.
+
+Two engines share the scheduler/admission machinery:
+
+* ``SimServeEngine`` - virtual-time engine with an explicit decode-step cost
+  model calibrated to the TPU-v5e roofline.  It exhibits the serving-level
+  *scalability collapse* the paper describes for locks: as more streams are
+  admitted, resident KV exceeds the HBM budget (swap thrash) and per-step
+  latency grows, so throughput fades and then falls off a cliff.  GCR
+  admission (``core.admission.GCRAdmission`` / ``core.pod_aware.GCRPod``)
+  parks excess streams and keeps throughput at the peak - the Figure 6
+  phenomenology at the serving layer.
+
+* ``JaxServeEngine`` - drives a real model (prefill + decode_step) with slot
+  management over a fixed batch; used by the examples and integration tests
+  on CPU with the reduced configs.
+
+Step-cost model (per decode step over the active batch):
+    t = t_fixed + t_tok * B_active + t_kv * (KV_resident / B_active ...)
+      + thrash(KV_resident / HBM budget)      [superlinear beyond 1.0]
+      + t_xpod * cross_pod_mix                [GCR-POD's target]
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.admission import GCRAdmission, NoAdmission
+from ..core.pod_aware import GCRPod
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    gen_len: int
+    pod: int = 0
+    arrive_ms: float = 0.0
+    # runtime state
+    generated: int = 0
+    done_ms: float = -1.0
+    first_token_ms: float = -1.0
+
+
+@dataclass
+class StepCostModel:
+    """Decode-step latency model (ms) for one engine step."""
+
+    t_fixed_ms: float = 3.0          # kernel launch + collectives floor
+    t_tok_ms: float = 0.02           # per active stream
+    kv_bytes_per_tok: float = 160e3  # bytes of KV per resident token
+    # KV share of one 8-chip v5e serving replica's HBM
+    hbm_budget: float = 0.6 * 16e9 * 8
+    thrash_coef: float = 40.0        # ms per unit oversubscription
+    t_xpod_ms: float = 6.0           # cross-pod mixing penalty (per step)
+
+    def step_ms(self, n_active: int, resident_tokens: int,
+                pod_mix: float) -> float:
+        t = self.t_fixed_ms + self.t_tok_ms * n_active
+        load = resident_tokens * self.kv_bytes_per_tok / self.hbm_budget
+        if load > 1.0:
+            # beyond-HBM: swapping KV pages in/out each step (superlinear)
+            t += self.thrash_coef * (load - 1.0) ** 2 * max(1, n_active)
+        t += self.t_xpod_ms * pod_mix
+        return t
+
+
+@dataclass
+class ServeResult:
+    completed: int
+    sim_ms: float
+    token_throughput: float          # tokens/s
+    request_throughput: float        # requests/s
+    p50_latency_ms: float
+    p99_latency_ms: float
+    mean_ttft_ms: float
+    unfairness: float                # paper Section 6.1 metric over streams
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        return (f"done={self.completed} tok/s={self.token_throughput:,.0f} "
+                f"p50={self.p50_latency_ms:.0f}ms p99={self.p99_latency_ms:.0f}ms "
+                f"ttft={self.mean_ttft_ms:.0f}ms unfair={self.unfairness:.2f}")
+
+
+class SimServeEngine:
+    """Virtual-time continuous batching with pluggable admission."""
+
+    def __init__(self, admission, cost: Optional[StepCostModel] = None,
+                 avg_prompt: int = 512):
+        self.admission = admission
+        self.cost = cost or StepCostModel()
+        self.requests: Dict[int, Request] = {}
+        self.avg_prompt = avg_prompt
+
+    def run(self, requests: List[Request], max_ms: float = 60_000.0
+            ) -> ServeResult:
+        adm = self.admission
+        now = 0.0
+        pending = sorted(requests, key=lambda r: r.arrive_ms)
+        pi = 0
+        active: Dict[int, Request] = {}
+        completed: List[Request] = []
+        tokens_out = 0
+
+        def admit(rid: int) -> None:
+            r = self.requests[rid]
+            active[rid] = r
+
+        while now < max_ms:
+            # arrivals
+            while pi < len(pending) and pending[pi].arrive_ms <= now:
+                r = pending[pi]
+                pi += 1
+                self.requests[r.rid] = r
+                if adm.offer(r.rid, r.pod):
+                    admit(r.rid)
+            if not active and pi >= len(pending) and not adm.num_parked:
+                break
+            if not active:
+                # idle until next arrival
+                if pi < len(pending):
+                    now = max(now, pending[pi].arrive_ms)
+                    continue
+                break
+
+            # one decode step over the active batch
+            resident = sum(r.prompt_len + r.generated for r in active.values())
+            pod_mix = (adm.active_pod_mix()
+                       if isinstance(adm, GCRPod) else self._mix(active))
+            dt = self.cost.step_ms(len(active), resident, pod_mix)
+            now += dt
+            adm.tick()
+
+            finished: List[int] = []
+            for r in active.values():
+                r.generated += 1
+                tokens_out += 1
+                if r.first_token_ms < 0:
+                    r.first_token_ms = now
+                if r.generated >= r.gen_len:
+                    r.done_ms = now
+                    finished.append(r.rid)
+            for rid in finished:
+                if rid in active:
+                    completed.append(active.pop(rid))
+                else:                   # demoted after finishing: un-park it
+                    completed.append(self.requests[rid])
+                    if hasattr(adm, "cancel"):
+                        adm.cancel(rid)
+                for new_rid in adm.release(rid):
+                    # promoted/work-conserved admissions (may demote someone)
+                    if new_rid in self.requests and \
+                            new_rid not in active and \
+                            self.requests[new_rid].done_ms < 0:
+                        admit(new_rid)
+                # demotions: active streams no longer in adm.active
+                for rid2 in list(active.keys()):
+                    if rid2 not in getattr(adm, "active", {rid2: None}):
+                        active.pop(rid2)
+
+        lat = sorted((r.done_ms - r.arrive_ms) for r in completed) or [0.0]
+        ttft = [r.first_token_ms - r.arrive_ms for r in completed
+                if r.first_token_ms >= 0] or [0.0]
+        per_stream = sorted(r.generated for r in self.requests.values())
+        half = len(per_stream) // 2
+        unfair = (sum(per_stream[half:]) / max(1, sum(per_stream))
+                  if per_stream else 0.5)
+        dur_s = max(now, 1e-9) / 1e3
+        return ServeResult(
+            completed=len(completed),
+            sim_ms=now,
+            token_throughput=tokens_out / dur_s,
+            request_throughput=len(completed) / dur_s,
+            p50_latency_ms=lat[len(lat) // 2],
+            p99_latency_ms=lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+            mean_ttft_ms=float(np.mean(ttft)),
+            unfairness=unfair,
+            stats={
+                "promotions": getattr(adm, "stat_promotions", 0),
+                "demotions": getattr(adm, "stat_demotions", 0),
+                "parked_end": adm.num_parked,
+            },
+        )
+
+    @staticmethod
+    def _mix(active: Dict[int, Request]) -> float:
+        if not active:
+            return 0.0
+        pods: Dict[int, int] = {}
+        for r in active.values():
+            pods[r.pod] = pods.get(r.pod, 0) + 1
+        return 1.0 - max(pods.values()) / len(active)
+
+
+def make_admission(kind: str, active_limit: int, n_pods: int = 2,
+                   promote_every: int = 64):
+    if kind == "none":
+        return NoAdmission()
+    if kind == "gcr":
+        return GCRAdmission(active_limit, promote_every)
+    if kind == "gcr_pod":
+        return GCRPod(active_limit, n_pods, promote_every)
+    raise ValueError(f"unknown admission kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Real-model engine (CPU examples / integration tests)
+# ---------------------------------------------------------------------------
+
+
+class JaxServeEngine:
+    """Batched decode over a real model with fixed slots + GCR admission.
+
+    The batch has ``n_slots`` lanes; admitted streams occupy lanes, parked
+    streams wait in the GCR queue.  Prefill is per-stream (lane-local cache
+    fill is emulated by re-prefilling the lane batch on admission - adequate
+    for the reduced CPU configs the examples run)."""
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int,
+                 admission_kind: str = "gcr", promote_every: int = 16):
+        import jax
+        import jax.numpy as jnp
+
+        from ..models import decode_step, prefill
+
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.admission = make_admission(admission_kind, n_slots,
+                                        promote_every=promote_every)
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_len=max_len))
+        self._jnp = jnp
+
+    def generate(self, prompts: "np.ndarray", gen_len: int
+                 ) -> "np.ndarray":
+        """prompts: (n_streams, prompt_len) int32.  Greedy decode; streams
+        beyond the active limit are parked and admitted as slots free."""
+        jnp = self._jnp
+        n = prompts.shape[0]
+        out = np.zeros((n, gen_len), np.int32)
+        waiting = list(range(n))
+        active: List[int] = []
+        progress = {i: 0 for i in range(n)}
+
+        while waiting or active:
+            # admission
+            newly = []
+            while waiting:
+                sid = waiting[0]
+                if self.admission.offer(sid):
+                    newly.append(sid)
+                    waiting.pop(0)
+                else:
+                    break  # queue is FIFO; head parked => all parked
+            active.extend(newly)
+            if not active:
+                break
+            # (re)prefill the active batch
+            batch = {"tokens": jnp.asarray(prompts[active])}
+            logits, cache = self._prefill(self.params, batch)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            steps = gen_len - min(progress[s] for s in active)
+            for t in range(gen_len):
+                for j, sid in enumerate(active):
+                    if progress[sid] < gen_len:
+                        out[sid, progress[sid]] = int(tok[j, 0])
+                        progress[sid] += 1
+                logits, cache = self._decode(self.params, cache, tok)
+                tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            done = [sid for sid in active if progress[sid] >= gen_len]
+            for sid in done:
+                self.admission.release(sid)
+            active = [sid for sid in active if progress[sid] < gen_len]
+        return out

@@ -1,0 +1,184 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Covers the paper's lemmas at the data-structure level (FIFO queue order,
+single-signal), the GCR admission state machine (work conservation,
+active-set bound modulo transient promotion, no stream lost), simulator
+determinism, and the GCR-MoE admission (capacity bound, rotation fairness).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admission import GCRAdmission
+from repro.core.pod_aware import GCRPod
+from repro.core.simulator import run_sim
+
+# ---------------------------------------------------------------------------
+# GCR admission state machine
+# ---------------------------------------------------------------------------
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("offer"), st.integers(0, 49), st.integers(0, 3)),
+        st.tuples(st.just("release"), st.integers(0, 49), st.integers(0, 3)),
+    ),
+    min_size=1, max_size=200)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops=ops, limit=st.integers(1, 8), promote=st.integers(2, 32))
+def test_admission_invariants(ops, limit, promote):
+    adm = GCRAdmission(active_limit=limit, promote_every=promote)
+    offered = set()
+    for op, sid, _pod in ops:
+        if op == "offer" and sid not in offered and sid not in adm.active:
+            adm.offer(sid)
+            offered.add(sid)
+        elif op == "release" and sid in adm.active:
+            adm.release(sid)
+            offered.discard(sid)
+        # invariant: active set bounded by limit + 1 (transient promotion)
+        assert adm.num_active <= limit + 1
+        # invariant: no stream both active and parked
+        parked_ids = {s.stream_id for s in adm.queue}
+        assert not (set(adm.active) & parked_ids)
+    # work conservation: if below limit, nothing is parked
+    if adm.num_active < limit:
+        assert adm.num_parked == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=ops, limit=st.integers(1, 8), pods=st.integers(1, 4))
+def test_pod_admission_invariants(ops, limit, pods):
+    adm = GCRPod(active_limit=limit, n_pods=pods, promote_every=8,
+                 pod_rotate_every=16)
+    offered = set()
+    for op, sid, pod in ops:
+        if op == "offer" and sid not in offered and sid not in adm.active:
+            adm.offer(sid, pod)
+            offered.add(sid)
+        elif op == "release" and sid in adm.active:
+            adm.release(sid)
+            offered.discard(sid)
+        assert adm.num_active <= limit + 1
+        parked = {s.stream_id for q in adm.pod_queues for s in q}
+        assert not (set(adm.active) & parked)
+    if adm.num_active < limit:
+        assert adm.num_parked == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 30), n_offer=st.integers(2, 40))
+def test_admission_fifo_order(n, n_offer):
+    """Parked streams are admitted in FIFO order (queue Lemma 4 analogue)."""
+    adm = GCRAdmission(active_limit=1, promote_every=10**9)
+    adm.offer(0)
+    for sid in range(1, n_offer):
+        adm.offer(sid)
+    order = []
+    cur = 0
+    while True:
+        newly = adm.release(cur)
+        if not newly:
+            break
+        order.extend(newly)
+        cur = newly[-1]
+    assert order == sorted(order)
+
+
+# ---------------------------------------------------------------------------
+# Simulator determinism + monotone sanity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([2, 8, 40, 64]),
+       lock=st.sampled_from(["ttas", "mcs_spin", "gcr(mcs_spin)",
+                             "gcr_numa(pthread)"]))
+def test_simulator_deterministic(seed, n, lock):
+    a = run_sim(lock, n, seed=seed, duration_us=5_000)
+    b = run_sim(lock, n, seed=seed, duration_us=5_000)
+    assert a.total_ops == b.total_ops
+    assert a.per_thread_ops == b.per_thread_ops
+    assert a.handoff_sum_us == b.handoff_sum_us
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_simulator_ops_conserved(seed):
+    r = run_sim("gcr(ttas)", 16, seed=seed, duration_us=10_000)
+    assert sum(r.per_thread_ops) == r.total_ops
+    assert 0.5 <= r.unfairness <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# GCR-MoE admission properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), off=st.integers(0, 1 << 20))
+def test_moe_capacity_and_rotation(seed, off):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.moe import moe_mlp, moe_params
+
+    E, k, D, S, B = 4, 2, 16, 32, 2
+    key = jax.random.key(seed)
+    p = moe_params(key, D, 32, E, jnp.float32)
+    x = jax.random.normal(key, (B, S, D))
+    out, aux = moe_mlp(p, x, n_experts=E, top_k=k, capacity_factor=0.5,
+                       gcr_admission=True,
+                       priority_offset=jnp.int32(off))
+    # output finite; drop fraction within [0, 1)
+    assert bool(jnp.isfinite(out).all())
+    assert 0.0 <= float(aux["moe_drop_frac"]) < 1.0
+    # rotation changes which tokens drop but not the drop budget
+    out2, aux2 = moe_mlp(p, x, n_experts=E, top_k=k, capacity_factor=0.5,
+                         gcr_admission=True,
+                         priority_offset=jnp.int32(off + 7))
+    assert abs(float(aux["moe_drop_frac"])
+               - float(aux2["moe_drop_frac"])) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-4, 1e3))
+def test_int8_quantization_bounded_error(seed, scale):
+    import jax.numpy as jnp
+
+    from repro.optim.compression import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32) * scale)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    import jax.numpy as jnp
+
+    from repro.optim.compression import (compress_with_feedback,
+                                         dequantize_int8,
+                                         init_error_feedback)
+
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+    err = init_error_feedback(g)
+    acc_plain = np.zeros(256, np.float32)
+    acc_fb = np.zeros(256, np.float32)
+    for _ in range(50):
+        (qs, e_new) = compress_with_feedback(g, err)
+        err = e_new
+        acc_fb += np.asarray(dequantize_int8(*qs["w"]))
+        q, s = __import__("repro.optim.compression",
+                          fromlist=["quantize_int8"]).quantize_int8(g["w"])
+        acc_plain += np.asarray(dequantize_int8(q, s))
+    true = np.asarray(g["w"]) * 50
+    assert np.abs(acc_fb - true).mean() <= np.abs(acc_plain - true).mean() + 1e-4
