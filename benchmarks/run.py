@@ -17,7 +17,8 @@ import time
 
 def main() -> None:
     sys.path.insert(0, "src")
-    from benchmarks import ablation, apps, figures, roofline, serving_bench
+    from benchmarks import (ablation, apps, cluster_bench, figures, roofline,
+                            serving_bench)
 
     suites = [
         ("ablation", ablation.knob_sensitivity),
@@ -32,6 +33,7 @@ def main() -> None:
         ("leveldb", apps.leveldb_analog),
         ("threads", apps.real_threads_microbench),
         ("serving", serving_bench.serving_collapse),
+        ("cluster", cluster_bench.cluster_collapse),
         ("roofline", roofline.roofline_rows),
         ("dryrun", roofline.summary),
     ]

@@ -10,21 +10,20 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-import numpy as np
-
+from repro.cluster.workload import WorkloadSpec, uniform
 from repro.serving.engine import Request, SimServeEngine, make_admission
 
 Row = Tuple[str, float, str]
 
 ACTIVE_LIMIT = 384
 
+# same distribution (and same seeded draws) as the historical ad-hoc
+# generator this bench used before cluster.workload existed
+_SPEC = WorkloadSpec(prompt_range=(256, 1024), gen_range=(64, 256), n_pods=2)
+
 
 def _workload(n_streams: int, seed: int = 0) -> List[Request]:
-    rng = np.random.default_rng(seed)
-    return [Request(rid=i, prompt_len=int(rng.integers(256, 1024)),
-                    gen_len=int(rng.integers(64, 256)), pod=i % 2,
-                    arrive_ms=float(rng.uniform(0, 500)))
-            for i in range(n_streams)]
+    return uniform(n_streams, window_ms=500.0, spec=_SPEC, seed=seed)
 
 
 def serving_collapse() -> List[Row]:

@@ -1,0 +1,45 @@
+"""L2: cluster fleet - multi-replica virtual-time serving (DESIGN.md).
+
+The paper restricts the set of threads circulating through a lock; L1
+(``core.admission``) restricts the set of streams circulating through one
+engine batch; this package restricts and steers the set of streams
+circulating through a *fleet* of replicas: open-loop workloads
+(``workload``), pluggable routing with a GCR-occupancy-aware policy
+(``router``), a shared-clock event loop with an autoscaler hook
+(``fleet``), and SLO telemetry (``telemetry``).
+"""
+
+from .fleet import (Fleet, FleetConfig, QueueDepthAutoscaler,
+                    est_capacity_rps, knee_cost, run_fleet)
+from .router import (ROUTERS, GCRAwareRouter, LeastOutstandingRouter,
+                     PowerOfTwoRouter, RoundRobinRouter, Router, make_router)
+from .telemetry import SLO, ClusterResult, ClusterTelemetry
+from .workload import (WORKLOADS, WorkloadSpec, bursty, diurnal,
+                       make_workload, poisson, replay, uniform)
+
+__all__ = [
+    "Fleet",
+    "FleetConfig",
+    "QueueDepthAutoscaler",
+    "run_fleet",
+    "knee_cost",
+    "est_capacity_rps",
+    "ROUTERS",
+    "Router",
+    "RoundRobinRouter",
+    "LeastOutstandingRouter",
+    "PowerOfTwoRouter",
+    "GCRAwareRouter",
+    "make_router",
+    "SLO",
+    "ClusterResult",
+    "ClusterTelemetry",
+    "WORKLOADS",
+    "WorkloadSpec",
+    "poisson",
+    "bursty",
+    "diurnal",
+    "replay",
+    "uniform",
+    "make_workload",
+]

@@ -1,0 +1,216 @@
+"""Shared-clock virtual-time fleet of serving replicas (DESIGN.md L2).
+
+One event loop, N ``SimServeEngine`` replicas.  Three event kinds on a
+single heap keyed by virtual milliseconds (ties broken by insertion order,
+so runs are exactly deterministic under a fixed seed):
+
+* ``arrive``  - the open-loop workload injects a request; the router picks
+  a replica; if that replica is idle it starts a decode step;
+* ``step``    - a replica's in-flight decode step completes; streams that
+  were routed to it mid-step join the next step (continuous batching);
+* ``scale``   - periodic autoscaler hook: queue-depth-triggered scale-out
+  adds a replica to the live pool (routers see it on the next arrival).
+
+Decode-step effects are applied when the step *starts* (token counts and
+completion times are stamped with the step's end time, so all observables
+are consistent); the heap only sequences step boundaries.  This is the
+same arrivals-join-at-step-boundaries semantics as the single-replica
+``SimServeEngine.run`` loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from ..serving.engine import (Request, SimServeEngine, StepCostModel,
+                              make_admission)
+from .router import Router
+from .telemetry import ClusterResult, ClusterTelemetry, SLO
+from .workload import WorkloadSpec
+
+
+def knee_cost(spec: WorkloadSpec, active_limit: int,
+              oversub: float = 2.0) -> StepCostModel:
+    """Cost model whose HBM knee sits at ``oversub`` x the footprint of a
+    full active set under ``spec``'s mean request shape.
+
+    Used by the benches/tests so collapse physics stays reachable at
+    scaled-down workload sizes; derives from ``kv_bytes_per_tok`` so the
+    knee tracks the cost model instead of a copy-pasted constant."""
+    base = StepCostModel()
+    mean_resident = spec.mean_prompt + spec.mean_gen / 2
+    return dataclasses.replace(
+        base,
+        hbm_budget=oversub * active_limit * mean_resident
+        * base.kv_bytes_per_tok)
+
+
+def est_capacity_rps(spec: WorkloadSpec, active_limit: int,
+                     n_replicas: int,
+                     cost: Optional[StepCostModel] = None) -> float:
+    """Analytic saturation point: full active set, no thrash, no pod mix."""
+    cost = cost or StepCostModel()
+    mean_resident = spec.mean_prompt + spec.mean_gen / 2
+    step_ms = cost.step_ms(active_limit, int(active_limit * mean_resident),
+                           0.0)
+    tok_s = active_limit / (step_ms / 1e3)
+    return n_replicas * tok_s / spec.mean_gen
+
+
+@dataclass
+class FleetConfig:
+    """Replica-pool shape; every replica is identical (heterogeneous pools
+    are a roadmap follow-on)."""
+
+    n_replicas: int = 4
+    admission: str = "gcr"           # none | gcr | gcr_pod
+    active_limit: int = 128
+    n_pods: int = 2
+    promote_every: int = 64
+    cost: Optional[StepCostModel] = None
+
+    def make_engine(self) -> SimServeEngine:
+        adm = make_admission(self.admission, self.active_limit,
+                             n_pods=self.n_pods,
+                             promote_every=self.promote_every)
+        return SimServeEngine(adm, cost=self.cost)
+
+    def make_engines(self) -> List[SimServeEngine]:
+        return [self.make_engine() for _ in range(self.n_replicas)]
+
+
+class QueueDepthAutoscaler:
+    """Scale out when mean parked depth per replica crosses a threshold.
+
+    Deliberately the simplest useful policy - a hook point, not the real
+    thing (see ROADMAP open items).  Scale-in is absent: parked streams
+    cost nothing, so shedding replicas mid-run only loses KV state.
+    """
+
+    def __init__(self, cfg: FleetConfig, max_replicas: int = 8,
+                 parked_per_replica: Optional[float] = None,
+                 cooldown_ms: float = 2000.0) -> None:
+        self.cfg = cfg
+        self.max_replicas = max_replicas
+        # default trigger: a full active set's worth of parked streams
+        self.parked_per_replica = (float(cfg.active_limit)
+                                   if parked_per_replica is None
+                                   else parked_per_replica)
+        self.cooldown_ms = cooldown_ms
+        self._last_scale_ms = -1e18
+
+    def __call__(self, fleet: "Fleet", now_ms: float
+                 ) -> Optional[SimServeEngine]:
+        if len(fleet.replicas) >= self.max_replicas:
+            return None
+        if now_ms - self._last_scale_ms < self.cooldown_ms:
+            return None
+        parked = sum(r.admission.num_parked for r in fleet.replicas)
+        if parked / len(fleet.replicas) <= self.parked_per_replica:
+            return None
+        self._last_scale_ms = now_ms
+        return self.cfg.make_engine()
+
+
+class Fleet:
+    """N replicas + router + telemetry on one virtual clock."""
+
+    def __init__(self, replicas: List[SimServeEngine], router: Router,
+                 telemetry: Optional[ClusterTelemetry] = None,
+                 autoscaler: Optional[
+                     Callable[["Fleet", float], Optional[SimServeEngine]]
+                 ] = None,
+                 autoscale_every_ms: float = 500.0) -> None:
+        if not replicas:
+            raise ValueError("fleet needs at least one replica")
+        self.replicas = replicas
+        self.router = router
+        self.telemetry = telemetry or ClusterTelemetry()
+        self.autoscaler = autoscaler
+        self.autoscale_every_ms = autoscale_every_ms
+
+    # -- event loop ----------------------------------------------------------
+    def run(self, requests: List[Request], max_ms: float = 120_000.0
+            ) -> ClusterResult:
+        heap: list = []
+        seq = itertools.count()
+        stepping = [False] * len(self.replicas)
+        step_end = [0.0] * len(self.replicas)
+
+        # clone on entry: engines mutate Request state in place, and one
+        # workload list is typically swept across many policy runs
+        for r in sorted(requests, key=lambda r: (r.arrive_ms, r.rid)):
+            heapq.heappush(heap, (r.arrive_ms, next(seq), "arrive",
+                                  r.fresh()))
+        if self.autoscaler is not None:
+            heapq.heappush(heap,
+                           (self.autoscale_every_ms, next(seq), "scale", None))
+
+        def start_step(i: int, t: float) -> None:
+            dt, _done = self.replicas[i].step(t)
+            if dt > 0.0:
+                stepping[i] = True
+                step_end[i] = t + dt
+                heapq.heappush(heap, (t + dt, next(seq), "step", i))
+
+        now = 0.0
+        injected = 0
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if t > max_ms:
+                break
+            if kind != "scale":
+                # bookkeeping ticks must not extend the measured duration
+                now = t
+            if kind == "arrive":
+                req: Request = payload
+                injected += 1
+                i = self.router.route(req, self.replicas)
+                self.replicas[i].submit(req)
+                self.telemetry.sample(i, self.replicas[i])
+                if not stepping[i] and self.replicas[i].has_work:
+                    start_step(i, t)
+            elif kind == "step":
+                i = payload
+                stepping[i] = False
+                self.telemetry.sample(i, self.replicas[i])
+                if self.replicas[i].has_work:
+                    start_step(i, t)
+            elif kind == "scale":
+                new = self.autoscaler(self, t) if self.autoscaler else None
+                if new is not None:
+                    self.replicas.append(new)
+                    stepping.append(False)
+                    step_end.append(0.0)
+                    self.telemetry.on_scale(t)
+                # keep ticking while any work remains on the heap
+                if any(k in ("arrive", "step") for _, _, k, _ in heap):
+                    heapq.heappush(
+                        heap,
+                        (t + self.autoscale_every_ms, next(seq), "scale",
+                         None))
+        # offered = requests that actually arrived before the max_ms cutoff,
+        # so completed + live == offered holds for any (workload, max_ms).
+        # Step effects are banked at step start, so a truncated run must
+        # extend the measured end over in-flight steps - their tokens and
+        # completion stamps are already counted (the single-engine loop has
+        # the same now += dt overshoot past max_ms).
+        end = max([now] + [e for i, e in enumerate(step_end) if stepping[i]])
+        return self.telemetry.finalize(end, self.replicas, injected)
+
+
+def run_fleet(requests: List[Request], router: Router,
+              cfg: Optional[FleetConfig] = None,
+              slo: Optional[SLO] = None,
+              autoscale: bool = False,
+              max_ms: float = 120_000.0) -> ClusterResult:
+    """One-call convenience wrapper used by benches, tests, and the CLI."""
+    cfg = cfg or FleetConfig()
+    telem = ClusterTelemetry(slo or SLO())
+    scaler = QueueDepthAutoscaler(cfg) if autoscale else None
+    fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler)
+    return fleet.run(requests, max_ms=max_ms)

@@ -1,0 +1,135 @@
+"""Pluggable fleet routing policies (DESIGN.md L2).
+
+The router is the cluster's analogue of the paper's lock-acquisition path:
+every arriving stream must be placed on *some* replica, and a policy that
+ignores per-replica active-set occupancy recreates lock-style collapse one
+level up - it keeps feeding replicas whose batch is already past the HBM
+knee, exactly like threads piling onto a saturated lock.
+
+* ``round_robin``       - occupancy-blind; the collapse baseline;
+* ``least_outstanding`` - classic least-loaded by outstanding streams;
+* ``p2c``               - power-of-two-choices (seeded sampling);
+* ``gcr_aware``         - reads each replica's GCR admission state
+  (``num_active`` / ``active_limit`` / ``num_parked``) and applies pod
+  affinity: the GCR-NUMA/GCR-POD preferred-socket construction lifted to
+  replica placement.  Replicas are statically partitioned among pods
+  (replica ``i`` serves pod ``i % n_pods``), so each replica's active set
+  stays pod-pure and never pays the cross-pod mixing penalty; within the
+  partition the router fills active-set headroom first and only then parks
+  on the shortest passive queue.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from ..serving.engine import Request, SimServeEngine
+
+ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware")
+
+
+class Router:
+    """Route every arriving request to a replica index.
+
+    ``replicas`` is the fleet's live engine list; it may *grow* between
+    calls (autoscaler), so policies must index it afresh each time.
+    """
+
+    name = "base"
+
+    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Occupancy-blind rotation - the collapse baseline."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._i = 0
+
+    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+        i = self._i % len(replicas)
+        self._i += 1
+        return i
+
+
+class LeastOutstandingRouter(Router):
+    """Fewest unfinished streams (active + parked); ties to lowest index."""
+
+    name = "least_outstanding"
+
+    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].outstanding, i))
+
+
+class PowerOfTwoRouter(Router):
+    """Sample two replicas, keep the less loaded one (seeded, deterministic)."""
+
+    name = "p2c"
+
+    def __init__(self, seed: int = 0) -> None:
+        self._rng = np.random.default_rng(seed)
+
+    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+        n = len(replicas)
+        if n == 1:
+            return 0
+        i, j = (int(x) for x in self._rng.choice(n, size=2, replace=False))
+        if (replicas[j].outstanding, j) < (replicas[i].outstanding, i):
+            return j
+        return i
+
+
+class GCRAwareRouter(Router):
+    """Occupancy-aware, pod-affine placement (GCR-POD at the fleet layer).
+
+    Falls back gracefully on replicas without admission limits
+    (``NoAdmission``): there is no headroom signal, so within the pod
+    partition it degrades to least-outstanding.
+    """
+
+    name = "gcr_aware"
+
+    def __init__(self, n_pods: int = 2) -> None:
+        self.n_pods = max(1, n_pods)
+
+    def _partition(self, pod: int, n: int) -> List[int]:
+        group = [i for i in range(n) if i % self.n_pods == pod % self.n_pods]
+        return group or list(range(n))
+
+    @staticmethod
+    def _headroom(eng: SimServeEngine) -> Optional[int]:
+        limit = getattr(eng.admission, "active_limit", None)
+        if limit is None:
+            return None
+        return limit - eng.admission.num_active
+
+    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+        group = self._partition(req.pod, len(replicas))
+        head = {i: self._headroom(replicas[i]) for i in group}
+        if any(h is None for h in head.values()):
+            # unlimited replicas in the pool: least-outstanding in-pod
+            return min(group, key=lambda i: (replicas[i].outstanding, i))
+        free = [i for i in group if head[i] > 0]
+        if free:
+            # fill the emptiest active set first
+            return min(free, key=lambda i: (-head[i], i))
+        # all at their limit: park on the shortest passive queue
+        return min(group, key=lambda i: (replicas[i].admission.num_parked, i))
+
+
+def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:
+    if name == "round_robin":
+        return RoundRobinRouter()
+    if name == "least_outstanding":
+        return LeastOutstandingRouter()
+    if name == "p2c":
+        return PowerOfTwoRouter(seed)
+    if name == "gcr_aware":
+        return GCRAwareRouter(n_pods)
+    raise ValueError(f"unknown router {name!r}")

@@ -1,0 +1,140 @@
+"""Cluster-level SLO telemetry (DESIGN.md L2).
+
+Collapse at fleet scale is invisible in mean throughput until it is
+catastrophic; it shows up first in the latency tail and in *goodput* -
+tokens delivered by requests that met their SLO.  This module aggregates:
+
+* TTFT p50/p95/p99 and per-token decode latency p50/p95/p99;
+* goodput-under-SLO (tok/s from SLO-met requests only) and attainment;
+* per-replica active/parked occupancy (end-of-run and peak), the direct
+  observable the GCR-aware router steers on.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from ..serving.engine import Request, SimServeEngine
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Per-request service objective."""
+
+    ttft_ms: float = 2000.0       # time to first token
+    per_token_ms: float = 40.0    # mean inter-token latency after the first
+
+    def met(self, r: Request) -> bool:
+        if r.done_ms < 0 or r.first_token_ms < 0:
+            return False
+        if r.first_token_ms - r.arrive_ms > self.ttft_ms:
+            return False
+        decode_ms = r.done_ms - r.first_token_ms
+        return decode_ms / max(1, r.gen_len - 1) <= self.per_token_ms
+
+
+def percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile over an ascending-sorted sequence."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return float(sorted_vals[idx])
+
+
+@dataclass
+class ClusterResult:
+    offered: int
+    completed: int
+    sim_ms: float
+    token_throughput: float              # tokens/s, all completed work
+    request_throughput: float            # requests/s
+    goodput_tok_s: float                 # tokens/s from SLO-met requests
+    slo_attainment: float                # SLO-met / offered
+    ttft_p50_ms: float
+    ttft_p95_ms: float
+    ttft_p99_ms: float
+    per_token_p50_ms: float
+    per_token_p95_ms: float
+    per_token_p99_ms: float
+    per_replica: List[Dict[str, float]] = field(default_factory=list)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        return (f"offered={self.offered} done={self.completed} "
+                f"tok/s={self.token_throughput:,.0f} "
+                f"goodput={self.goodput_tok_s:,.0f} "
+                f"slo={self.slo_attainment:.0%} "
+                f"ttft_p99={self.ttft_p99_ms:,.0f}ms "
+                f"tpt_p99={self.per_token_p99_ms:.1f}ms "
+                f"replicas={len(self.per_replica)}")
+
+
+class ClusterTelemetry:
+    """Accumulates fleet observations; ``finalize`` renders a ClusterResult.
+
+    The fleet calls ``sample`` after every event touching a replica, which
+    keeps peak occupancy exact without a separate sampling clock."""
+
+    def __init__(self, slo: SLO = SLO()) -> None:
+        self.slo = slo
+        self.peak_active: Dict[int, int] = {}
+        self.peak_parked: Dict[int, int] = {}
+        self.scale_events: List[float] = []
+
+    def sample(self, idx: int, eng: SimServeEngine) -> None:
+        a = len(eng.active)
+        p = eng.admission.num_parked
+        if a > self.peak_active.get(idx, 0):
+            self.peak_active[idx] = a
+        if p > self.peak_parked.get(idx, 0):
+            self.peak_parked[idx] = p
+
+    def on_scale(self, now_ms: float) -> None:
+        self.scale_events.append(now_ms)
+
+    def finalize(self, now_ms: float, replicas: List[SimServeEngine],
+                 offered: int) -> ClusterResult:
+        completed: List[Request] = []
+        for eng in replicas:
+            completed.extend(eng.completed)
+        tokens = sum(eng.tokens_out for eng in replicas)
+
+        ttft = sorted(r.first_token_ms - r.arrive_ms for r in completed
+                      if r.first_token_ms >= 0)
+        per_tok = sorted((r.done_ms - r.first_token_ms)
+                         / max(1, r.gen_len - 1)
+                         for r in completed if r.first_token_ms >= 0)
+        met = [r for r in completed if self.slo.met(r)]
+        dur_s = max(now_ms, 1e-9) / 1e3
+
+        per_replica = []
+        for i, eng in enumerate(replicas):
+            per_replica.append({
+                "tokens": eng.tokens_out,
+                "completed": len(eng.completed),
+                "active_end": len(eng.active),
+                "parked_end": eng.admission.num_parked,
+                "peak_active": self.peak_active.get(i, 0),
+                "peak_parked": self.peak_parked.get(i, 0),
+                "promotions": getattr(eng.admission, "stat_promotions", 0),
+                "demotions": getattr(eng.admission, "stat_demotions", 0),
+            })
+
+        return ClusterResult(
+            offered=offered,
+            completed=len(completed),
+            sim_ms=now_ms,
+            token_throughput=tokens / dur_s,
+            request_throughput=len(completed) / dur_s,
+            goodput_tok_s=sum(r.gen_len for r in met) / dur_s,
+            slo_attainment=len(met) / max(1, offered),
+            ttft_p50_ms=percentile(ttft, 0.50),
+            ttft_p95_ms=percentile(ttft, 0.95),
+            ttft_p99_ms=percentile(ttft, 0.99),
+            per_token_p50_ms=percentile(per_tok, 0.50),
+            per_token_p95_ms=percentile(per_tok, 0.95),
+            per_token_p99_ms=percentile(per_tok, 0.99),
+            per_replica=per_replica,
+            stats={"scale_events": len(self.scale_events)},
+        )

@@ -1,0 +1,196 @@
+"""Open-loop arrival generation for the fleet simulator (DESIGN.md L2).
+
+Closed-loop workloads - a fixed population of streams whose next request
+waits for the previous one - self-throttle as latency grows, which *hides*
+scalability collapse: the offered load falls exactly when the system is
+drowning.  The USL-style collapse sweep needs offered load to be an
+independent variable, so the cluster subsystem drives replicas with
+**open-loop** arrival processes (arrivals do not care how the fleet is
+doing):
+
+* ``poisson``  - homogeneous Poisson at a target RPS;
+* ``bursty``   - two-state Markov-modulated Poisson (calm/burst), mean
+  rate held at the target RPS - the flash-crowd shape that defeats
+  averaged-occupancy routing;
+* ``diurnal``  - sinusoidal ramp-up/ramp-down over the window (thinned
+  Poisson), the daily traffic curve an autoscaler must track;
+* ``replay``   - seeded trace replay from explicit rows;
+* ``uniform``  - the legacy serving-bench shape (uniform arrivals in a
+  window), kept for the single-replica benches.
+
+All generators are exactly deterministic under a fixed seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from ..serving.engine import Request
+
+WORKLOADS = ("poisson", "bursty", "diurnal", "uniform")
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Per-request shape distribution (lengths in tokens)."""
+
+    prompt_range: Tuple[int, int] = (256, 1024)
+    gen_range: Tuple[int, int] = (64, 256)
+    n_pods: int = 2
+
+    @property
+    def mean_prompt(self) -> float:
+        return 0.5 * (self.prompt_range[0] + self.prompt_range[1])
+
+    @property
+    def mean_gen(self) -> float:
+        return 0.5 * (self.gen_range[0] + self.gen_range[1])
+
+
+DEFAULT_SPEC = WorkloadSpec()
+
+
+def _materialize(arrive_ms: Sequence[float], spec: WorkloadSpec,
+                 rng: np.random.Generator, start_rid: int = 0
+                 ) -> List[Request]:
+    """Attach prompt/gen lengths and a pod to each arrival time.
+
+    Pods are *drawn*, not assigned round-robin: a deterministic
+    ``rid % n_pods`` pattern happens to agree with round-robin routing
+    (request k -> replica k % n), which would hand the occupancy-blind
+    baseline accidental pod purity."""
+    out = []
+    for i, t in enumerate(arrive_ms):
+        rid = start_rid + i
+        out.append(Request(
+            rid=rid,
+            prompt_len=int(rng.integers(*spec.prompt_range)),
+            gen_len=int(rng.integers(*spec.gen_range)),
+            pod=int(rng.integers(0, spec.n_pods)),
+            arrive_ms=float(t)))
+    return out
+
+
+def poisson(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
+            seed: int = 0, start_rid: int = 0) -> List[Request]:
+    """Homogeneous Poisson arrivals at ``rps`` over ``duration_ms``."""
+    if rps <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    rate_per_ms = rps / 1e3
+    times: List[float] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_per_ms)
+        if t >= duration_ms:
+            break
+        times.append(t)
+    return _materialize(times, spec, rng, start_rid)
+
+
+def bursty(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
+           seed: int = 0, burst_factor: float = 4.0,
+           dwell_ms: Tuple[float, float] = (2000.0, 500.0),
+           start_rid: int = 0) -> List[Request]:
+    """Two-state Markov-modulated Poisson process (calm <-> burst).
+
+    State dwell times are exponential with means ``dwell_ms``; the burst
+    state arrives ``burst_factor`` x faster than the calm state, with the
+    calm rate solved so the *time-averaged* rate equals ``rps`` - sweeps
+    stay comparable with ``poisson`` at the same nominal load.
+    """
+    if rps <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    d0, d1 = dwell_ms
+    # stationary occupancy of each state is proportional to its mean dwell
+    pi1 = d1 / (d0 + d1)
+    calm = rps / (1.0 - pi1 + pi1 * burst_factor)
+    rates_per_ms = (calm / 1e3, calm * burst_factor / 1e3)
+    times: List[float] = []
+    t, state = 0.0, 0
+    state_end = rng.exponential(d0)
+    while t < duration_ms:
+        gap = rng.exponential(1.0 / rates_per_ms[state])
+        if t + gap >= state_end:
+            # advance to the state boundary, switch, and redraw there
+            t = state_end
+            state = 1 - state
+            state_end = t + rng.exponential(dwell_ms[state])
+            continue
+        t += gap
+        if t < duration_ms:
+            times.append(t)
+    return _materialize(times, spec, rng, start_rid)
+
+
+def diurnal(rps_peak: float, duration_ms: float,
+            spec: WorkloadSpec = DEFAULT_SPEC, seed: int = 0,
+            floor: float = 0.1, start_rid: int = 0) -> List[Request]:
+    """Sinusoidal ramp: rate(t) = peak * (floor + (1-floor) sin^2(pi t/T)).
+
+    Implemented by thinning a homogeneous Poisson at the peak rate, so the
+    arrival stream is exact, not binned.
+    """
+    if rps_peak <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    rate_per_ms = rps_peak / 1e3
+    times: List[float] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_per_ms)
+        if t >= duration_ms:
+            break
+        frac = floor + (1.0 - floor) * np.sin(np.pi * t / duration_ms) ** 2
+        if rng.uniform() < frac:
+            times.append(t)
+    return _materialize(times, spec, rng, start_rid)
+
+
+def replay(trace: Iterable[Tuple[float, int, int, int]],
+           start_rid: int = 0) -> List[Request]:
+    """Replay explicit trace rows ``(arrive_ms, prompt_len, gen_len, pod)``."""
+    out = [Request(rid=start_rid + i, prompt_len=int(p), gen_len=int(g),
+                   pod=int(pod), arrive_ms=float(t))
+           for i, (t, p, g, pod) in enumerate(trace)]
+    out.sort(key=lambda r: r.arrive_ms)
+    return out
+
+
+def uniform(n: int, window_ms: float = 500.0,
+            spec: WorkloadSpec = DEFAULT_SPEC, seed: int = 0,
+            start_rid: int = 0) -> List[Request]:
+    """Legacy single-replica bench shape: n requests, arrivals uniform in
+    ``[0, window_ms)``.  Draw order matches the historical serving-bench
+    generator so seeded results stay bit-identical."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        rid = start_rid + i
+        out.append(Request(
+            rid=rid,
+            prompt_len=int(rng.integers(*spec.prompt_range)),
+            gen_len=int(rng.integers(*spec.gen_range)),
+            pod=rid % spec.n_pods,
+            arrive_ms=float(rng.uniform(0, window_ms))))
+    return out
+
+
+def make_workload(kind: str, rps: float, duration_ms: float,
+                  spec: WorkloadSpec = DEFAULT_SPEC, seed: int = 0
+                  ) -> List[Request]:
+    """Dispatcher used by benches and the launcher.  For ``uniform`` the
+    request count is derived from rps * duration."""
+    if kind == "poisson":
+        return poisson(rps, duration_ms, spec, seed)
+    if kind == "bursty":
+        return bursty(rps, duration_ms, spec, seed)
+    if kind == "diurnal":
+        return diurnal(rps, duration_ms, spec, seed)
+    if kind == "uniform":
+        return uniform(int(rps * duration_ms / 1e3), duration_ms, spec, seed)
+    raise ValueError(f"unknown workload kind {kind!r}")

@@ -53,7 +53,7 @@ class ModelConfig:
     n_experts_active: int = 0
     moe_d_ff: int = 0
     moe_capacity_factor: float = 1.25
-    # GCR-MoE (beyond-paper, DESIGN.md L2): concurrency-restriction-style
+    # GCR-MoE (beyond-paper, DESIGN.md section 2): concurrency-restriction-style
     # token admission with rotating priority for long-term fairness.
     gcr_moe: bool = False
     gcr_moe_rotate_every: int = 64  # steps between priority rotations

@@ -6,6 +6,7 @@ Layers (see DESIGN.md section 2):
       ``simulator`` used for quantitative reproduction of the paper figures.
   L1  distributed-runtime admission control for serving:
       ``admission.GCRAdmission`` and the pod-aware ``pod_aware.GCRPod``.
+  L2  fleet-scale restriction and routing lives in ``repro.cluster``.
 """
 
 from .atomics import AtomicInt, AtomicRef

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.config import SHAPES, V5E, MeshConfig, OptimizerConfig, cells_for
 from repro.configs import ARCHS, get_config
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, normalize_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.parallel import ShardingRules
 from repro.steps import (batch_shapes, decode_state_shapes, make_decode_step,
@@ -170,7 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     walk = analyze_hlo(hlo)       # loop-aware per-device flops/bytes/colls
     del hlo

@@ -11,6 +11,7 @@ import argparse
 import jax
 import numpy as np
 
+from ..cluster import ROUTERS, WORKLOADS
 from ..configs import ARCHS, get_smoke_config
 from ..models import init_params
 from ..serving.engine import (JaxServeEngine, Request, SimServeEngine,
@@ -30,7 +31,43 @@ def main() -> None:
                     help="virtual-time capacity sweep instead of the "
                          "real-model engine")
     ap.add_argument("--active-limit", type=int, default=384)
+    # -- cluster mode (multi-replica virtual-time fleet) --------------------
+    ap.add_argument("--cluster", action="store_true",
+                    help="run the L2 fleet simulator: N replicas behind a "
+                         "router on one virtual clock")
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--router", default="gcr_aware", choices=ROUTERS)
+    ap.add_argument("--workload", default="poisson", choices=WORKLOADS)
+    ap.add_argument("--rps", type=float, default=500.0)
+    ap.add_argument("--duration-ms", type=float, default=5_000.0)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the queue-depth scale-out hook")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.cluster:
+        from ..cluster import (FleetConfig, WorkloadSpec, make_router,
+                               make_workload, run_fleet)
+
+        spec = WorkloadSpec()
+        cfg = FleetConfig(n_replicas=args.replicas,
+                          admission=args.admission,
+                          active_limit=args.active_limit)
+        reqs = make_workload(args.workload, args.rps, args.duration_ms,
+                             spec, args.seed)
+        res = run_fleet(reqs, make_router(args.router, seed=args.seed),
+                        cfg, autoscale=args.autoscale)
+        print(f"router={args.router} admission={args.admission} "
+              f"workload={args.workload} rps={args.rps:g}")
+        print(res.summary())
+        hdr = (f"{'replica':>8} {'tokens':>10} {'done':>6} {'active':>7} "
+               f"{'parked':>7} {'peak_a':>7} {'peak_p':>7}")
+        print(hdr)
+        for i, r in enumerate(res.per_replica):
+            print(f"{i:>8} {r['tokens']:>10,} {r['completed']:>6} "
+                  f"{r['active_end']:>7} {r['parked_end']:>7} "
+                  f"{r['peak_active']:>7} {r['peak_parked']:>7}")
+        return
 
     if args.fleet_sweep:
         rng = np.random.default_rng(0)

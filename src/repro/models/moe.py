@@ -4,7 +4,7 @@ Dense-dispatch MoE in the TPU idiom (GShard/Switch style): routing produces a
 (tokens, experts, capacity) dispatch tensor contracted with einsums - no
 scatter/gather, fully shardable over the ``model`` axis (expert parallelism).
 
-**GCR-MoE (beyond-paper, DESIGN.md L2).**  Expert capacity is a saturated
+**GCR-MoE (beyond-paper, DESIGN.md section 2).**  Expert capacity is a saturated
 shared resource; tokens are the contending "threads".  Standard dense MoE
 admits tokens *by position* (FIFO) and always drops the same tail positions
 when an expert saturates - the starvation problem GCR's periodic shuffling

@@ -45,6 +45,13 @@ class Request:
     done_ms: float = -1.0
     first_token_ms: float = -1.0
 
+    def fresh(self) -> "Request":
+        """Copy with runtime state reset, so one workload list can drive
+        many engine/fleet runs without cross-contamination."""
+        return Request(rid=self.rid, prompt_len=self.prompt_len,
+                       gen_len=self.gen_len, pod=self.pod,
+                       arrive_ms=self.arrive_ms)
+
 
 @dataclass
 class StepCostModel:
@@ -88,81 +95,127 @@ class ServeResult:
 
 
 class SimServeEngine:
-    """Virtual-time continuous batching with pluggable admission."""
+    """Virtual-time continuous batching with pluggable admission.
+
+    Two ways to drive it:
+
+    * ``run(requests)`` - self-clocked: the engine owns virtual time and
+      processes arrivals/steps to completion (the single-replica benches).
+    * ``submit()`` / ``step(now)`` - externally clocked: a shared event loop
+      (``cluster.fleet.Fleet``) injects arrivals and asks for one decode
+      step at a time, so N replicas advance on one clock.
+    """
 
     def __init__(self, admission, cost: Optional[StepCostModel] = None,
                  avg_prompt: int = 512):
         self.admission = admission
         self.cost = cost or StepCostModel()
-        self.requests: Dict[int, Request] = {}
         self.avg_prompt = avg_prompt
+        self.requests: Dict[int, Request] = {}
+        self.active: Dict[int, Request] = {}
+        self.completed: List[Request] = []
+        self.tokens_out = 0
 
+    # -- steppable API (shared by run() and the cluster fleet loop) ----------
+    def submit(self, r: Request) -> bool:
+        """Register an arriving request.  True => admitted to the batch now;
+        False => parked in the admission's passive queue."""
+        self.requests[r.rid] = r
+        if self.admission.offer(r.rid, r.pod):
+            self.active[r.rid] = r
+            return True
+        return False
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active)
+
+    @property
+    def outstanding(self) -> int:
+        """Streams on this replica that have not finished (active + parked)."""
+        return len(self.active) + self.admission.num_parked
+
+    def step(self, now: float) -> tuple:
+        """One decode step over the active batch, starting at virtual time
+        ``now``.  Returns ``(dt_ms, finished_requests)``; finished requests
+        carry ``done_ms = now + dt``.  Idle engine => ``(0.0, [])``.
+
+        Streams submitted while a step is in flight (fleet mode) join
+        ``self.active`` immediately but only decode from the next step."""
+        adm = self.admission
+        active = self.active
+        if not active:
+            return 0.0, []
+        resident = sum(r.prompt_len + r.generated for r in active.values())
+        pod_mix = (adm.active_pod_mix()
+                   if isinstance(adm, GCRPod) else self._mix(active))
+        dt = self.cost.step_ms(len(active), resident, pod_mix)
+        end = now + dt
+        adm.tick()
+
+        finished: List[int] = []
+        for r in active.values():
+            r.generated += 1
+            self.tokens_out += 1
+            if r.first_token_ms < 0:
+                r.first_token_ms = end
+            if r.generated >= r.gen_len:
+                r.done_ms = end
+                finished.append(r.rid)
+        done: List[Request] = []
+        for rid in finished:
+            if rid in active:
+                done.append(active.pop(rid))
+            else:                   # demoted after finishing: un-park it
+                done.append(self.requests[rid])
+                if hasattr(adm, "cancel"):
+                    adm.cancel(rid)
+            for new_rid in adm.release(rid):
+                # promoted/work-conserved admissions (may demote someone)
+                if new_rid in self.requests and \
+                        new_rid not in active and \
+                        self.requests[new_rid].done_ms < 0:
+                    active[new_rid] = self.requests[new_rid]
+            # demotions: active streams no longer in adm.active
+            for rid2 in list(active.keys()):
+                if rid2 not in getattr(adm, "active", {rid2: None}):
+                    active.pop(rid2)
+        self.completed.extend(done)
+        return dt, done
+
+    # -- self-clocked driver -------------------------------------------------
     def run(self, requests: List[Request], max_ms: float = 60_000.0
             ) -> ServeResult:
+        self.requests.clear()
+        self.active.clear()
+        self.completed.clear()
+        self.tokens_out = 0
         adm = self.admission
         now = 0.0
         pending = sorted(requests, key=lambda r: r.arrive_ms)
         pi = 0
-        active: Dict[int, Request] = {}
-        completed: List[Request] = []
-        tokens_out = 0
-
-        def admit(rid: int) -> None:
-            r = self.requests[rid]
-            active[rid] = r
 
         while now < max_ms:
             # arrivals
             while pi < len(pending) and pending[pi].arrive_ms <= now:
-                r = pending[pi]
+                self.submit(pending[pi])
                 pi += 1
-                self.requests[r.rid] = r
-                if adm.offer(r.rid, r.pod):
-                    admit(r.rid)
-            if not active and pi >= len(pending) and not adm.num_parked:
+            if not self.active and pi >= len(pending) and not adm.num_parked:
                 break
-            if not active:
+            if not self.active:
                 # idle until next arrival
                 if pi < len(pending):
                     now = max(now, pending[pi].arrive_ms)
                     continue
                 break
-
-            # one decode step over the active batch
-            resident = sum(r.prompt_len + r.generated for r in active.values())
-            pod_mix = (adm.active_pod_mix()
-                       if isinstance(adm, GCRPod) else self._mix(active))
-            dt = self.cost.step_ms(len(active), resident, pod_mix)
+            dt, _ = self.step(now)
             now += dt
-            adm.tick()
 
-            finished: List[int] = []
-            for r in active.values():
-                r.generated += 1
-                tokens_out += 1
-                if r.first_token_ms < 0:
-                    r.first_token_ms = now
-                if r.generated >= r.gen_len:
-                    r.done_ms = now
-                    finished.append(r.rid)
-            for rid in finished:
-                if rid in active:
-                    completed.append(active.pop(rid))
-                else:                   # demoted after finishing: un-park it
-                    completed.append(self.requests[rid])
-                    if hasattr(adm, "cancel"):
-                        adm.cancel(rid)
-                for new_rid in adm.release(rid):
-                    # promoted/work-conserved admissions (may demote someone)
-                    if new_rid in self.requests and \
-                            new_rid not in active and \
-                            self.requests[new_rid].done_ms < 0:
-                        admit(new_rid)
-                # demotions: active streams no longer in adm.active
-                for rid2 in list(active.keys()):
-                    if rid2 not in getattr(adm, "active", {rid2: None}):
-                        active.pop(rid2)
+        return self._result(now)
 
+    def _result(self, now: float) -> ServeResult:
+        adm = self.admission
+        completed = self.completed
         lat = sorted((r.done_ms - r.arrive_ms) for r in completed) or [0.0]
         ttft = [r.first_token_ms - r.arrive_ms for r in completed
                 if r.first_token_ms >= 0] or [0.0]
@@ -174,7 +227,7 @@ class SimServeEngine:
         return ServeResult(
             completed=len(completed),
             sim_ms=now,
-            token_throughput=tokens_out / dur_s,
+            token_throughput=self.tokens_out / dur_s,
             request_throughput=len(completed) / dur_s,
             p50_latency_ms=lat[len(lat) // 2],
             p99_latency_ms=lat[min(len(lat) - 1, int(len(lat) * 0.99))],

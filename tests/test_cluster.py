@@ -1,0 +1,185 @@
+"""L2 cluster fleet: determinism, conservation, and routing claims.
+
+All fleet runs here use a scaled-down cost model (HBM knee at 2x the
+active set) so collapse physics is reachable at test-sized workloads in
+well under a second per run.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster import (SLO, Fleet, FleetConfig, ClusterTelemetry,
+                           QueueDepthAutoscaler, WorkloadSpec, bursty,
+                           diurnal, est_capacity_rps, knee_cost, make_router,
+                           make_workload, poisson, replay, run_fleet,
+                           uniform)
+from repro.cluster.router import ROUTERS
+
+SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
+LIMIT = 32
+COST = knee_cost(SPEC, LIMIT, oversub=2.0)
+# analytic saturation of the 2-replica fleet (~220 rps at current defaults)
+SAT_RPS = est_capacity_rps(SPEC, LIMIT, 2, COST)
+
+
+def _cfg(admission="gcr", n_replicas=2):
+    return FleetConfig(n_replicas=n_replicas, admission=admission,
+                       active_limit=LIMIT, n_pods=2, cost=COST)
+
+
+def _run(router_name, admission="gcr", rps=2 * SAT_RPS, seed=7,
+         duration_ms=1500.0):
+    reqs = poisson(rps, duration_ms, SPEC, seed=seed)
+    return run_fleet(reqs, make_router(router_name, seed=1, n_pods=2),
+                     _cfg(admission), max_ms=60_000.0)
+
+
+# ---------------------------------------------------------------------------
+# workload generators
+# ---------------------------------------------------------------------------
+
+
+def test_workloads_deterministic_and_sorted():
+    for kind in ("poisson", "bursty", "diurnal", "uniform"):
+        a = make_workload(kind, 300.0, 1000.0, SPEC, seed=5)
+        b = make_workload(kind, 300.0, 1000.0, SPEC, seed=5)
+        assert [dataclasses.astuple(r) for r in a] == \
+               [dataclasses.astuple(r) for r in b], kind
+        assert len(a) > 0, kind
+        times = [r.arrive_ms for r in a]
+        assert all(0 <= t < 1000.0 for t in times), kind
+        assert len({r.rid for r in a}) == len(a), kind
+    c = make_workload("poisson", 300.0, 1000.0, SPEC, seed=6)
+    assert [r.arrive_ms for r in c] != [r.arrive_ms for r in a]
+
+
+def test_poisson_rate_roughly_matches():
+    reqs = poisson(500.0, 10_000.0, SPEC, seed=0)
+    assert 0.8 * 5000 < len(reqs) < 1.2 * 5000
+
+
+def test_replay_preserves_trace():
+    trace = [(10.0, 100, 20, 1), (5.0, 50, 10, 0), (7.5, 64, 8, 1)]
+    reqs = replay(trace)
+    assert [r.arrive_ms for r in reqs] == [5.0, 7.5, 10.0]
+    assert reqs[0].prompt_len == 50 and reqs[2].pod == 1
+
+
+def test_uniform_matches_legacy_serving_bench_draws():
+    """serving_bench's seeded workload must stay bit-identical after the
+    swap to cluster.workload.uniform (same rng call order)."""
+    import numpy as np
+    rng = np.random.default_rng(3)
+    legacy = [(int(rng.integers(256, 1024)), int(rng.integers(64, 256)),
+               i % 2, float(rng.uniform(0, 500)))
+              for i in range(50)]
+    spec = WorkloadSpec(prompt_range=(256, 1024), gen_range=(64, 256),
+                        n_pods=2)
+    new = uniform(50, 500.0, spec, seed=3)
+    assert legacy == [(r.prompt_len, r.gen_len, r.pod, r.arrive_ms)
+                      for r in new]
+
+
+# ---------------------------------------------------------------------------
+# fleet event loop
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_deterministic_under_fixed_seed():
+    a = _run("gcr_aware")
+    b = _run("gcr_aware")
+    assert a.completed == b.completed
+    assert a.sim_ms == b.sim_ms
+    assert a.token_throughput == b.token_throughput
+    assert a.ttft_p99_ms == b.ttft_p99_ms
+    assert a.per_replica == b.per_replica
+    # p2c routes through a seeded rng; it must be deterministic too
+    assert _run("p2c").per_replica == _run("p2c").per_replica
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+@pytest.mark.parametrize("admission", ["none", "gcr", "gcr_pod"])
+def test_request_conservation(router_name, admission):
+    """Nothing lost, nothing duplicated, for every router x admission."""
+    reqs = poisson(2 * SAT_RPS, 800.0, SPEC, seed=11)
+    cfg = _cfg(admission)
+    telem = ClusterTelemetry(SLO())
+    fleet = Fleet(cfg.make_engines(), make_router(router_name, seed=1,
+                                                  n_pods=2), telem)
+    res = fleet.run(reqs, max_ms=20_000.0)
+    assert res.offered == len(reqs)
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live == res.offered
+    # each rid landed on exactly one replica, and none was invented
+    seen = []
+    for eng in fleet.replicas:
+        seen.extend(eng.requests.keys())
+    assert len(seen) == len(set(seen)) == len(reqs)
+    assert set(seen) == {r.rid for r in reqs}
+
+
+def test_conservation_with_max_ms_cutoff():
+    """Arrivals past the max_ms horizon never enter the fleet; ``offered``
+    counts only injected requests so conservation holds at any cutoff."""
+    reqs = poisson(SAT_RPS, 5000.0, SPEC, seed=2)
+    res = run_fleet(reqs, make_router("round_robin", n_pods=2), _cfg(),
+                    max_ms=1000.0)
+    assert 0 < res.offered < len(reqs)
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live == res.offered
+
+
+def test_gcr_aware_at_least_round_robin_at_2x_saturation():
+    rr = _run("round_robin")
+    aware = _run("gcr_aware")
+    assert aware.token_throughput >= rr.token_throughput
+    # the pod-purity edge is material, not a tie
+    assert aware.token_throughput > 1.2 * rr.token_throughput
+    assert aware.goodput_tok_s >= rr.goodput_tok_s
+
+
+def test_occupancy_blind_none_collapses_gcr_holds():
+    """The fleet-level Figure 6 shape, in miniature."""
+    peak = _run("round_robin", admission="none", rps=0.5 * SAT_RPS)
+    over = _run("round_robin", admission="none")
+    aware_over = _run("gcr_aware", admission="gcr")
+    assert over.token_throughput < 0.7 * peak.token_throughput
+    assert aware_over.token_throughput > peak.token_throughput
+
+
+def test_router_grows_with_autoscaled_pool():
+    """Queue-depth autoscaler adds replicas mid-run; routers must keep
+    placing on the live pool and conservation must still hold."""
+    reqs = bursty(3 * SAT_RPS, 1500.0, SPEC, seed=9)
+    cfg = _cfg(n_replicas=2)
+    scaler = QueueDepthAutoscaler(cfg, max_replicas=4, cooldown_ms=200.0)
+    fleet = Fleet(cfg.make_engines(), make_router("gcr_aware", n_pods=2),
+                  ClusterTelemetry(SLO()), autoscaler=scaler,
+                  autoscale_every_ms=100.0)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    assert len(res.per_replica) > 2          # it scaled out
+    assert res.stats["scale_events"] == len(res.per_replica) - 2
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live == res.offered
+    assert res.per_replica[-1]["tokens"] > 0  # new replica took real work
+
+
+def test_telemetry_percentiles_and_slo():
+    res = _run("gcr_aware", rps=0.5 * SAT_RPS)
+    assert res.completed == res.offered
+    assert res.ttft_p50_ms <= res.ttft_p95_ms <= res.ttft_p99_ms
+    assert res.per_token_p50_ms <= res.per_token_p99_ms
+    assert 0.0 <= res.slo_attainment <= 1.0
+    assert res.goodput_tok_s <= res.token_throughput + 1e-9
+    # under-saturated + well-routed: everything meets the SLO
+    assert res.slo_attainment == 1.0
+
+
+def test_diurnal_ramp_exercises_idle_and_busy():
+    reqs = diurnal(2 * SAT_RPS, 2000.0, SPEC, seed=4, floor=0.05)
+    res = run_fleet(reqs, make_router("gcr_aware", n_pods=2), _cfg(),
+                    max_ms=60_000.0)
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live == res.offered
+    assert res.token_throughput > 0

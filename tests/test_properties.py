@@ -7,7 +7,11 @@ determinism, and the GCR-MoE admission (capacity bound, rotation fairness).
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.admission import GCRAdmission
 from repro.core.pod_aware import GCRPod
