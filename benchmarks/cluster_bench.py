@@ -1,13 +1,12 @@
-"""Cluster-scale scalability collapse and GCR-aware routing (DESIGN.md L2).
+"""Cluster-scale scalability collapse, GCR-aware routing, and the fleet
+control plane (DESIGN.md 7).
 
 The fleet-level reproduction of the paper's Figure 6 shape, one layer above
-``serving_bench``: offered RPS sweeps from half to 4x the fleet's
-saturation point, crossed with routing policy x per-replica admission.
-An occupancy-blind router over unrestricted replicas collapses (every
-replica's batch blows through the HBM knee and thrashes); the GCR-aware
-router over GCR replicas holds peak token throughput flat past saturation
-- restriction at L1 parks the excess, pod-affine placement at L2 keeps
-each replica's active set pure.
+``serving_bench``, plus the control-plane scenarios: offered RPS sweeps
+from half to 4x the fleet's saturation point crossed with routing policy x
+per-replica admission; a signal-staleness sweep; SLO-driven autoscaling
+(with KV-migration scale-in) against the queue-depth baseline; and a
+heterogeneous replica pool routed capacity-aware vs capacity-blind.
 
 Claims asserted (deterministic under the fixed seed):
 
@@ -15,7 +14,15 @@ Claims asserted (deterministic under the fixed seed):
   loses > 90%);
 * gcr_aware/gcr stays within 10% of its peak at every past-saturation
   point;
-* gcr_aware/gcr beats round_robin/gcr at 2x saturation (pod purity).
+* gcr_aware/gcr beats round_robin/gcr at 2x saturation (pod purity);
+* gcr_aware under >= 100 ms signal staleness retains >= 80% of its
+  omniscient-signal goodput at 2x saturation (graceful degradation - the
+  Malthusian-locks robustness property at the routing layer);
+* the predictive SLO controller meets >= the queue-depth scaler's SLO
+  attainment on the diurnal workload while spending fewer replica-ms
+  (scale-in works and pays for itself);
+* a heterogeneous pool (mixed active limits) routed capacity-aware beats
+  capacity-blind least_outstanding on goodput.
 
 Usage:  PYTHONPATH=src python benchmarks/cluster_bench.py [--smoke]
 """
@@ -25,8 +32,9 @@ from __future__ import annotations
 import argparse
 from typing import List, Tuple
 
-from repro.cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
-                           knee_cost, make_router, make_workload, run_fleet)
+from repro.cluster import (FleetConfig, SLOAutoscaler, WorkloadSpec,
+                           est_capacity_rps, knee_cost, make_router,
+                           make_workload, run_fleet)
 
 Row = Tuple[str, float, str]
 
@@ -52,6 +60,12 @@ SMOKE_POLICIES = [
     ("round_robin", "gcr"),
     ("gcr_aware", "gcr"),
 ]
+
+
+def _conserved(res) -> int:
+    """completed + live + in-migration; must equal offered for any run."""
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    return res.completed + live + int(res.stats.get("migrating_end", 0))
 
 
 def cluster_collapse(smoke: bool = False) -> List[Row]:
@@ -105,10 +119,8 @@ def cluster_collapse(smoke: bool = False) -> List[Row]:
 
     # request conservation across every run (nothing lost, nothing forged)
     for (rname, adm, mult), res in results.items():
-        live = sum(r["active_end"] + r["parked_end"]
-                   for r in res.per_replica)
-        assert res.completed + live == res.offered, \
-            f"{rname}/{adm}/x{mult}: {res.completed}+{live}!={res.offered}"
+        assert _conserved(res) == res.offered, \
+            f"{rname}/{adm}/x{mult}: {_conserved(res)}!={res.offered}"
 
     # bursty traffic + queue-depth autoscaler: the hook absorbs the burst
     burst = make_workload("bursty", cap, duration_ms, spec, SEED)
@@ -127,13 +139,142 @@ def cluster_collapse(smoke: bool = False) -> List[Row]:
     return rows
 
 
+def staleness_resilience(smoke: bool = False) -> List[Row]:
+    """gcr_aware routing from stale published signals: goodput must degrade
+    gracefully, retaining >= 80% of the omniscient-bus goodput at every
+    staleness point >= 100 ms (2x saturation, bursty arrivals, 4 replicas
+    so the router has an in-pod choice to get wrong)."""
+    n_replicas, limit = 4, 32
+    duration_ms = 2_500.0 if smoke else 4_000.0
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=N_PODS)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    reqs = make_workload("bursty", 2.0 * cap, duration_ms, spec, SEED)
+    cfg = FleetConfig(n_replicas=n_replicas, admission="gcr",
+                      active_limit=limit, n_pods=N_PODS, cost=cost)
+    stale_grid = [0.0, 120.0] if smoke else [0.0, 60.0, 120.0, 250.0]
+    rows: List[Row] = []
+    goodput = {}
+    for s in stale_grid:
+        res = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
+                        max_ms=120_000.0, staleness_ms=s,
+                        jitter_ms=(20.0 if s else 0.0), signal_seed=SEED)
+        goodput[s] = res.goodput_tok_s
+        rows.append((f"cluster/stale/{s:g}ms_goodput_tok_s",
+                     res.goodput_tok_s, ""))
+        rows.append((f"cluster/stale/{s:g}ms_ttft_p99_ms",
+                     res.ttft_p99_ms, ""))
+        assert _conserved(res) == res.offered
+    for s in stale_grid:
+        if s < 100.0:
+            continue
+        retain = goodput[s] / max(goodput[0.0], 1e-9)
+        rows.append((f"cluster/claims/stale_{s:g}ms_retention", retain, ""))
+        assert retain >= 0.80, \
+            f"staleness {s:g}ms kept only {retain:.0%} of omniscient goodput"
+    return rows
+
+
+def slo_scaling(smoke: bool = False) -> List[Row]:
+    """Diurnal ramp, 2 -> up-to-6 replicas: the predictive SLO controller
+    must meet >= the queue-depth scaler's attainment while billing fewer
+    replica-ms (its scale-in on the down-ramp pays for its earlier
+    scale-out on the way up)."""
+    limit = 32
+    # one diurnal cycle long enough that the down-ramp dominates the bill;
+    # shorter (smoke-sized) cycles leave scale-in no time to pay for the
+    # predictive scale-out, so smoke runs the full-size scenario too
+    duration_ms = 16_000.0
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=N_PODS)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
+    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=limit,
+                      n_pods=N_PODS, cost=cost)
+    cap0 = est_capacity_rps(spec, limit, 2, cost)
+    reqs = make_workload("diurnal", 2.5 * cap0, duration_ms, spec, SEED)
+
+    qd = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
+                   autoscale="queue", max_replicas=6, max_ms=120_000.0)
+    slo_scaler = SLOAutoscaler(cfg, max_replicas=6, predictive=True,
+                               rps_per_replica=cap0 / 2,
+                               cooldown_in_ms=800.0, scale_in_util=0.8,
+                               lead_ms=4000.0)
+    sc = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
+                   autoscale=slo_scaler, max_ms=120_000.0)
+
+    rows: List[Row] = []
+    for name, res in [("queue_depth", qd), ("slo_predictive", sc)]:
+        rows.append((f"cluster/scaler/{name}_attainment",
+                     res.slo_attainment, ""))
+        rows.append((f"cluster/scaler/{name}_replica_ms",
+                     res.stats["replica_ms"], ""))
+        rows.append((f"cluster/scaler/{name}_scale_out",
+                     res.stats["scale_events"], ""))
+        rows.append((f"cluster/scaler/{name}_scale_in",
+                     res.stats["scale_in_events"], ""))
+        assert _conserved(res) == res.offered
+    rows.append(("cluster/scaler/slo_migrated", sc.stats["migrated"], ""))
+    assert sc.stats["scale_in_events"] > 0, "SLO controller never scaled in"
+    assert sc.slo_attainment >= qd.slo_attainment, \
+        (f"SLO controller attainment {sc.slo_attainment:.1%} below "
+         f"queue-depth {qd.slo_attainment:.1%}")
+    assert sc.stats["replica_ms"] < qd.stats["replica_ms"], \
+        (f"SLO controller spent {sc.stats['replica_ms']:.0f} replica-ms vs "
+         f"queue-depth {qd.stats['replica_ms']:.0f} - scale-in didn't pay")
+    return rows
+
+
+def heterogeneous_pool(smoke: bool = False) -> List[Row]:
+    """Mixed active limits (big + small SKUs): capacity-aware gcr_aware
+    must beat capacity-blind least_outstanding on goodput - equalizing
+    outstanding streams across unequal replicas drowns the small ones."""
+    limits = [64, 16] if smoke else [96, 96, 32, 32]
+    duration_ms = 2_500.0 if smoke else 3_500.0
+    # single pod so the comparison isolates capacity awareness
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=1)
+    costs = [knee_cost(spec, l, oversub=HBM_OVERSUB) for l in limits]
+    cfg = FleetConfig(n_replicas=len(limits), admission="gcr",
+                      active_limit=max(limits), n_pods=1,
+                      active_limits=limits, costs=costs)
+    cap = sum(est_capacity_rps(spec, l, 1, c)
+              for l, c in zip(limits, costs))
+    reqs = make_workload("poisson", 1.2 * cap, duration_ms, spec, SEED)
+
+    rows: List[Row] = [("cluster/hetero/est_capacity_rps", cap, "")]
+    res = {}
+    for rname in ("least_outstanding", "gcr_aware"):
+        r = run_fleet(reqs, make_router(rname, seed=1, n_pods=1), cfg,
+                      max_ms=120_000.0)
+        res[rname] = r
+        rows.append((f"cluster/hetero/{rname}_goodput_tok_s",
+                     r.goodput_tok_s, ""))
+        rows.append((f"cluster/hetero/{rname}_ttft_p99_ms",
+                     r.ttft_p99_ms, ""))
+        assert _conserved(r) == r.offered
+    ratio = (res["gcr_aware"].goodput_tok_s
+             / max(res["least_outstanding"].goodput_tok_s, 1e-9))
+    rows.append(("cluster/claims/hetero_aware_vs_blind", ratio, ""))
+    assert ratio > 1.0, \
+        f"capacity-aware routing should beat blind on a mixed pool ({ratio:.2f}x)"
+    return rows
+
+
+def control_plane(smoke: bool = False) -> List[Row]:
+    """Staleness + autoscaling + heterogeneity scenarios as one suite."""
+    return (staleness_resilience(smoke) + slo_scaling(smoke)
+            + heterogeneous_pool(smoke))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grid for CI (seconds, not minutes)")
     args = ap.parse_args()
     print("name,value,derived")
-    for name, val, derived in cluster_collapse(smoke=args.smoke):
+    for name, val, derived in (cluster_collapse(smoke=args.smoke)
+                               + control_plane(smoke=args.smoke)):
         print(f"{name},{val:.6g},{derived}")
 
 

@@ -159,6 +159,42 @@ def fig11_fairness() -> List[Row]:
     return rows
 
 
+def fig_cluster_collapse() -> List[Row]:
+    """Cluster collapse sweep (ROADMAP: the L2 figure beside the Figure 6
+    reproductions): offered load from 0.5x to 4x fleet saturation, token
+    throughput for occupancy-blind routing over unrestricted replicas vs
+    GCR-aware routing over GCR replicas.  The former collapses past the
+    knee; the latter holds its peak - the paper's throughput shape with
+    replicas for threads and the router for the lock."""
+    from repro.cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
+                               knee_cost, make_router, make_workload,
+                               run_fleet)
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    limit, n_replicas = 32, 2
+    cost = knee_cost(spec, limit, oversub=2.0)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    mults = [0.5, 1.0, 2.0, 4.0]
+    curves = {("round_robin", "none"): [], ("gcr_aware", "gcr"): []}
+    rows: List[Row] = []
+    for mult in mults:
+        reqs = make_workload("poisson", cap * mult, 2_000.0, spec, seed=7)
+        for (rname, adm), ys in curves.items():
+            cfg = FleetConfig(n_replicas=n_replicas, admission=adm,
+                              active_limit=limit, n_pods=2, cost=cost)
+            res = run_fleet(reqs, make_router(rname, seed=1, n_pods=2),
+                            cfg, max_ms=60_000.0)
+            ys.append(res.token_throughput)
+            rows.append((f"fig_cluster/{rname}_{adm}/x{mult:g}_tok_s",
+                         res.token_throughput, ""))
+    blind = curves[("round_robin", "none")]
+    aware = curves[("gcr_aware", "gcr")]
+    assert blind[-1] < 0.7 * max(blind), "blind routing should collapse"
+    assert min(aware[2:]) > 0.9 * max(aware), "gcr_aware should hold peak"
+    assert aware[-1] > 2 * blind[-1], "restriction should win past the knee"
+    return rows
+
+
 def table_machines() -> List[Row]:
     """Cross-machine sanity (X6-2 / X5-4 / T7-2 models): GCR gain holds."""
     rows = []

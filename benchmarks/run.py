@@ -32,8 +32,10 @@ def main() -> None:
         ("kyoto", apps.kyoto_analog),
         ("leveldb", apps.leveldb_analog),
         ("threads", apps.real_threads_microbench),
+        ("fig_cluster", figures.fig_cluster_collapse),
         ("serving", serving_bench.serving_collapse),
         ("cluster", cluster_bench.cluster_collapse),
+        ("cluster_ctrl", cluster_bench.control_plane),
         ("roofline", roofline.roofline_rows),
         ("dryrun", roofline.summary),
     ]

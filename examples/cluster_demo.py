@@ -7,11 +7,16 @@ routing) holds throughput and the latency tail where occupancy-blind
 routing over unrestricted replicas collapses.  Finishes in seconds on CPU
 - it is all virtual time.
 
+Also demos the control plane: routing from a stale metrics bus, and the
+predictive SLO autoscaler scaling out for a diurnal ramp then scaling
+back in (paying KV migration for each retired replica).
+
 Usage:  PYTHONPATH=src python examples/cluster_demo.py
 """
 
-from repro.cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
-                           knee_cost, make_router, make_workload, run_fleet)
+from repro.cluster import (FleetConfig, SLOAutoscaler, WorkloadSpec,
+                           est_capacity_rps, knee_cost, make_router,
+                           make_workload, run_fleet)
 
 N_REPLICAS, LIMIT, N_PODS = 4, 64, 2
 SPEC = WorkloadSpec(prompt_range=(256, 1024), gen_range=(64, 256),
@@ -52,6 +57,41 @@ def main() -> None:
                        cfg, autoscale=True, max_ms=120_000.0)
     print(f"  fixed : {fixed.summary()}")
     print(f"  scaled: {scaled.summary()}")
+
+    # stale signals: the router sees only the last published report
+    print("\nsignal staleness (gcr_aware at 2x saturation, bursty):")
+    for stale in (0.0, 120.0, 500.0):
+        res = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS),
+                        FleetConfig(n_replicas=N_REPLICAS, admission="gcr",
+                                    active_limit=LIMIT, n_pods=N_PODS,
+                                    cost=COST),
+                        max_ms=120_000.0, staleness_ms=stale,
+                        jitter_ms=(20.0 if stale else 0.0))
+        tag = "omniscient" if stale == 0 else f"{stale:,.0f}ms stale"
+        print(f"  {tag:<12}: goodput={res.goodput_tok_s:,.0f} "
+              f"ttft_p99={res.ttft_p99_ms:,.0f}ms")
+
+    # predictive SLO controller on a diurnal day: out on the ramp, in on
+    # the decline (each retirement migrates KV at a virtual-clock cost)
+    print("\npredictive SLO autoscaler (diurnal ramp, 2 -> 6 -> min):")
+    cap0 = est_capacity_rps(SPEC, LIMIT, 2, COST)
+    day = make_workload("diurnal", 2.5 * cap0, 16_000.0, SPEC, seed=3)
+    qd = run_fleet(day, make_router("gcr_aware", n_pods=N_PODS), cfg,
+                   autoscale="queue", max_replicas=6, max_ms=120_000.0)
+    sc = run_fleet(day, make_router("gcr_aware", n_pods=N_PODS), cfg,
+                   autoscale=SLOAutoscaler(cfg, max_replicas=6,
+                                           predictive=True,
+                                           rps_per_replica=cap0 / 2,
+                                           cooldown_in_ms=800.0,
+                                           scale_in_util=0.8,
+                                           lead_ms=4000.0),
+                   max_ms=120_000.0)
+    for name, res in (("queue-depth", qd), ("slo-predict", sc)):
+        print(f"  {name}: slo={res.slo_attainment:.0%} "
+              f"replica_s={res.stats['replica_ms'] / 1e3:,.1f} "
+              f"out={res.stats['scale_events']:.0f} "
+              f"in={res.stats['scale_in_events']:.0f} "
+              f"migrated={res.stats['migrated']:.0f}")
 
 
 if __name__ == "__main__":

@@ -4,16 +4,21 @@ The paper restricts the set of threads circulating through a lock; L1
 (``core.admission``) restricts the set of streams circulating through one
 engine batch; this package restricts and steers the set of streams
 circulating through a *fleet* of replicas: open-loop workloads
-(``workload``), pluggable routing with a GCR-occupancy-aware policy
-(``router``), a shared-clock event loop with an autoscaler hook
-(``fleet``), and SLO telemetry (``telemetry``).
+(``workload``), a stale/sampled replica metrics bus (``signals``),
+pluggable routing with a capacity-aware GCR-occupancy policy
+(``router``), SLO-driven autoscaling with KV-migration scale-in
+(``controller``), a shared-clock event loop (``fleet``), and SLO
+telemetry (``telemetry``).
 """
 
-from .fleet import (Fleet, FleetConfig, QueueDepthAutoscaler,
-                    est_capacity_rps, knee_cost, run_fleet)
+from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
+                         SLOAutoscaler, make_autoscaler)
+from .fleet import (Fleet, FleetConfig, est_capacity_rps, knee_cost,
+                    run_fleet)
 from .router import (ROUTERS, GCRAwareRouter, LeastOutstandingRouter,
                      PowerOfTwoRouter, RoundRobinRouter, Router, make_router)
-from .telemetry import SLO, ClusterResult, ClusterTelemetry
+from .signals import ReplicaReport, ReplicaView, SignalBus
+from .telemetry import SLO, ClusterResult, ClusterTelemetry, percentile
 from .workload import (WORKLOADS, WorkloadSpec, bursty, diurnal,
                        make_workload, poisson, replay, uniform)
 
@@ -21,6 +26,10 @@ __all__ = [
     "Fleet",
     "FleetConfig",
     "QueueDepthAutoscaler",
+    "SLOAutoscaler",
+    "ScaleDecision",
+    "MigrationCost",
+    "make_autoscaler",
     "run_fleet",
     "knee_cost",
     "est_capacity_rps",
@@ -31,9 +40,13 @@ __all__ = [
     "PowerOfTwoRouter",
     "GCRAwareRouter",
     "make_router",
+    "SignalBus",
+    "ReplicaReport",
+    "ReplicaView",
     "SLO",
     "ClusterResult",
     "ClusterTelemetry",
+    "percentile",
     "WORKLOADS",
     "WorkloadSpec",
     "poisson",

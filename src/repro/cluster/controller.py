@@ -1,0 +1,257 @@
+"""Fleet autoscaling policies (DESIGN.md 7).
+
+The paper's wrapper grows and shrinks a lock's active set from observed
+contention; the fleet controller grows and shrinks the *replica pool* from
+observed SLO attainment.  Both read cheap, possibly-stale signals
+(``signals.SignalBus``) and both must pay a real cost to shrink - GCR
+re-parks a thread, the fleet migrates KV state off the retiring replica.
+
+* ``ScaleDecision``       - one tick's verdict: add an engine, or retire a
+  replica index (its unfinished streams migrate to the survivors after a
+  KV-transfer delay charged to the virtual clock);
+* ``MigrationCost``       - that delay's model (base handoff + bytes/bw);
+* ``QueueDepthAutoscaler``- the PR-1 threshold hook, kept as the baseline:
+  scale out on parked backlog, never scale in;
+* ``SLOAutoscaler``       - the production-shaped policy: scale out on
+  goodput/TTFT-attainment regression with backlog present, scale in when
+  the survivors can absorb the active load, and (``predictive=True``)
+  track the arrival-rate trend so the diurnal ramp is met ahead of time
+  instead of after the tail blows up.
+
+Every *replica-side* input comes from the signal bus, so controllers are
+exactly as stale as the router - ``period_ms=0`` makes both omniscient.
+The arrival counter is the one exception: the control plane lives in the
+load balancer and counts arrivals first-hand, so the predictive model's
+rate signal is always fresh.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional, Tuple
+
+from ..serving.engine import SimServeEngine
+
+
+class _SingleFleet:
+    """Autoscalers carry cross-tick state (cooldowns, counter baselines),
+    so an instance is valid for exactly one fleet run - reuse would seed
+    run 2 with run 1's history and silently skew its decisions."""
+
+    _fleet = None
+
+    def _bind(self, fleet) -> None:
+        if self._fleet is None:
+            self._fleet = fleet
+        elif self._fleet is not fleet:
+            raise RuntimeError(
+                f"{type(self).__name__} instances are single-fleet; "
+                "build a fresh autoscaler per run")
+
+
+@dataclass(frozen=True)
+class ScaleDecision:
+    """One autoscaler tick's verdict.  At most one of add/remove is set."""
+
+    add: Optional[SimServeEngine] = None
+    remove: Optional[int] = None      # replica index to retire + drain
+    reason: str = ""
+
+
+@dataclass(frozen=True)
+class MigrationCost:
+    """Virtual-time cost of moving one stream off a retiring replica.
+
+    Active streams pay for their resident KV over the inter-replica link;
+    parked streams hold no KV (parking is free, per the paper) and pay
+    only the control-plane handoff."""
+
+    base_ms: float = 5.0              # per-stream handoff RPC
+    bw_bytes_per_ms: float = 1e7      # ~10 GB/s inter-replica link
+
+    def ms(self, resident_tokens: int, kv_bytes_per_tok: float) -> float:
+        return (self.base_ms
+                + resident_tokens * kv_bytes_per_tok / self.bw_bytes_per_ms)
+
+
+class QueueDepthAutoscaler(_SingleFleet):
+    """Scale out when mean parked depth per replica crosses a threshold.
+
+    The PR-1 hook, now reading the signal bus instead of live engines (so
+    it lags exactly like the router under staleness).  Deliberately has no
+    scale-in: parked streams cost nothing, so it never lets go of a
+    replica - the baseline the SLO controller must beat on replica-ms.
+    """
+
+    def __init__(self, cfg, max_replicas: int = 8,
+                 parked_per_replica: Optional[float] = None,
+                 cooldown_ms: float = 2000.0) -> None:
+        self.cfg = cfg
+        self.max_replicas = max_replicas
+        # default trigger: a full active set's worth of parked streams
+        self.parked_per_replica = (float(cfg.active_limit)
+                                   if parked_per_replica is None
+                                   else parked_per_replica)
+        self.cooldown_ms = cooldown_ms
+        self._last_scale_ms = -1e18
+
+    def __call__(self, fleet, now_ms: float) -> Optional[ScaleDecision]:
+        self._bind(fleet)
+        live = fleet.live_indices()
+        if len(live) >= self.max_replicas:
+            return None
+        if now_ms - self._last_scale_ms < self.cooldown_ms:
+            return None
+        views = fleet.bus.views
+        parked = sum(views[i].num_parked for i in live)
+        if parked / len(live) <= self.parked_per_replica:
+            return None
+        self._last_scale_ms = now_ms
+        return ScaleDecision(add=self.cfg.make_engine(),
+                             reason=f"parked {parked} > "
+                                    f"{self.parked_per_replica:g}/replica")
+
+
+class SLOAutoscaler(_SingleFleet):
+    """SLO-attainment-driven scale-out, headroom-driven scale-in.
+
+    Per tick (reading only bus snapshots):
+
+    * window attainment = SLO-met / completed since the previous tick;
+    * **out** when attainment is under ``target_attainment`` AND parked
+      backlog exists (a miss with no backlog means the pool is not the
+      bottleneck), or when the predictive model wants more replicas;
+    * **in**  when the window met target, nothing is parked, and the
+      survivors' active-set capacity absorbs the current active load with
+      ``scale_in_util`` slack - the victim is the least-outstanding live
+      replica, and its streams migrate at ``MigrationCost`` (charged by
+      the fleet to the virtual clock, so a bad scale-in shows up as TTFT
+      regression, not as a free lunch);
+    * ``predictive=True`` fits a linear trend to the bus's arrival-rate
+      windows and sizes the pool for the rate ``lead_ms`` ahead
+      (``ceil(projected_rps / rps_per_replica)``), which is what tracks
+      the diurnal ramp without waiting for the SLO to burn first.
+    """
+
+    def __init__(self, cfg, max_replicas: int = 8, min_replicas: int = 1,
+                 target_attainment: float = 0.95,
+                 scale_in_util: float = 0.6,
+                 cooldown_out_ms: float = 1000.0,
+                 cooldown_in_ms: float = 2500.0,
+                 predictive: bool = False, lead_ms: float = 5000.0,
+                 rps_per_replica: Optional[float] = None,
+                 history: int = 8) -> None:
+        self.cfg = cfg
+        self.max_replicas = max_replicas
+        self.min_replicas = max(1, min_replicas)
+        self.target_attainment = target_attainment
+        self.scale_in_util = scale_in_util
+        self.cooldown_out_ms = cooldown_out_ms
+        self.cooldown_in_ms = cooldown_in_ms
+        self.predictive = predictive
+        self.lead_ms = lead_ms
+        self.rps_per_replica = rps_per_replica
+        self._hist: Deque[Tuple[float, int]] = deque(maxlen=max(3, history))
+        self._prev: Optional[Tuple[float, int, int]] = None
+        self._last_out = -1e18
+        self._last_in = -1e18
+
+    # -- predictive model ----------------------------------------------------
+    def _desired(self) -> Optional[int]:
+        """Replicas needed for the projected arrival rate, or None when the
+        model has no opinion (not predictive / not enough history)."""
+        if not self.predictive or self.rps_per_replica is None \
+                or len(self._hist) < 3:
+            return None
+        marks = list(self._hist)
+        pts: List[Tuple[float, float]] = []
+        for (t0, a0), (t1, a1) in zip(marks, marks[1:]):
+            if t1 > t0:
+                pts.append((0.5 * (t0 + t1), (a1 - a0) / (t1 - t0) * 1e3))
+        if len(pts) < 2:
+            return None
+        # least-squares slope of rps over time, projected lead_ms ahead
+        n = len(pts)
+        mt = sum(t for t, _ in pts) / n
+        mr = sum(r for _, r in pts) / n
+        var = sum((t - mt) ** 2 for t, _ in pts)
+        slope = (sum((t - mt) * (r - mr) for t, r in pts) / var
+                 if var > 0 else 0.0)
+        proj = max(0.0, pts[-1][1] + slope * self.lead_ms)
+        return int(math.ceil(proj / self.rps_per_replica))
+
+    def __call__(self, fleet, now_ms: float) -> Optional[ScaleDecision]:
+        self._bind(fleet)
+        live = fleet.live_indices()
+        # cumulative counters sum over EVERY replica ever registered -
+        # retired replicas keep their history on the bus, so the window
+        # delta stays monotone across a scale-in (summing survivors only
+        # would go negative and fake a perfect window)
+        all_reports = fleet.bus.snapshot(
+            now_ms, range(len(fleet.bus.engines)))
+        done = sum(r.completed for r in all_reports)
+        met = sum(r.slo_met for r in all_reports)
+        reports = [all_reports[i] for i in live]   # occupancy gauges: live only
+        self._hist.append((now_ms, fleet.bus.arrivals))
+        if self._prev is None:            # first tick: just baseline counters
+            self._prev = (now_ms, done, met)
+            return None
+        _, pd, pm = self._prev
+        self._prev = (now_ms, done, met)
+        d_done, d_met = done - pd, met - pm
+        parked = sum(r.num_parked for r in reports)
+        active = sum(r.num_active for r in reports)
+        if d_done > 0:
+            att = d_met / d_done
+        else:
+            # nothing completed: a stalled-but-loaded window is the worst
+            # SLO state there is, not a perfect one
+            att = 0.0 if parked > 0 else 1.0
+        limits = [r.active_limit if r.active_limit is not None
+                  else self.cfg.active_limit for r in reports]
+        n = len(live)
+        desired = self._desired()
+
+        if n < self.max_replicas \
+                and now_ms - self._last_out >= self.cooldown_out_ms:
+            breach = att < self.target_attainment and parked > 0
+            if breach or (desired is not None and desired > n):
+                self._last_out = now_ms
+                why = (f"attainment {att:.0%} < "
+                       f"{self.target_attainment:.0%}" if breach
+                       else f"projected need {desired} > {n}")
+                return ScaleDecision(add=self.cfg.make_engine(), reason=why)
+
+        if n > self.min_replicas \
+                and now_ms - self._last_in >= self.cooldown_in_ms \
+                and now_ms - self._last_out >= self.cooldown_in_ms:
+            k = min(range(n), key=lambda j: (reports[j].outstanding, live[j]))
+            rest = sum(limits) - limits[k]
+            drained = (parked == 0 and att >= self.target_attainment
+                       and active <= self.scale_in_util * rest)
+            if drained and (desired is None or desired < n):
+                self._last_in = now_ms
+                return ScaleDecision(
+                    remove=live[k],
+                    reason=f"active {active} fits {self.scale_in_util:g}x "
+                           f"of remaining {rest}")
+        return None
+
+
+def make_autoscaler(kind, cfg, rps_per_replica=None,
+                    max_replicas: int = 8):
+    """Dispatcher for ``run_fleet``/CLI: False/None, 'queue' (or True),
+    'slo', 'predictive', or an already-built callable."""
+    if kind in (False, None):
+        return None
+    if callable(kind):
+        return kind
+    if kind in (True, "queue"):
+        return QueueDepthAutoscaler(cfg, max_replicas=max_replicas)
+    if kind in ("slo", "predictive"):
+        return SLOAutoscaler(cfg, max_replicas=max_replicas,
+                             predictive=(kind == "predictive"),
+                             rps_per_replica=rps_per_replica)
+    raise ValueError(f"unknown autoscaler kind {kind!r}")

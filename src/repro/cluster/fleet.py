@@ -1,15 +1,29 @@
-"""Shared-clock virtual-time fleet of serving replicas (DESIGN.md L2).
+"""Shared-clock virtual-time fleet of serving replicas (DESIGN.md 7).
 
-One event loop, N ``SimServeEngine`` replicas.  Three event kinds on a
+One event loop, N ``SimServeEngine`` replicas.  Five event kinds on a
 single heap keyed by virtual milliseconds (ties broken by insertion order,
 so runs are exactly deterministic under a fixed seed):
 
 * ``arrive``  - the open-loop workload injects a request; the router picks
-  a replica; if that replica is idle it starts a decode step;
+  a replica *from the signal bus's last published occupancy views*; if
+  that replica is idle it starts a decode step;
 * ``step``    - a replica's in-flight decode step completes; streams that
   were routed to it mid-step join the next step (continuous batching);
-* ``scale``   - periodic autoscaler hook: queue-depth-triggered scale-out
-  adds a replica to the live pool (routers see it on the next arrival).
+* ``publish`` - a replica pushes its occupancy report to the signal bus
+  (only scheduled when the bus has ``period_ms > 0``; the live bus reads
+  engines directly and needs no events);
+* ``migrate`` - a stream drained off a retired replica re-arrives at the
+  router after its KV-transfer delay (the scale-in cost, charged to the
+  virtual clock);
+* ``scale``   - periodic autoscaler tick: a ``ScaleDecision`` either adds
+  a replica to the live pool (routers see it on the next arrival) or
+  retires one - the retiree's unfinished streams drain into ``migrate``
+  events.
+
+Pending *work* (arrive/step/migrate events) is tracked by an O(1)
+outstanding-work counter; bookkeeping events (scale/publish) reschedule
+themselves only while that counter is positive, so the loop terminates
+without rescanning the heap.
 
 Decode-step effects are applied when the step *starts* (token counts and
 completion times are stamped with the step's end time, so all observables
@@ -23,14 +37,21 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
 
 from ..serving.engine import (Request, SimServeEngine, StepCostModel,
                               make_admission)
+from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
+                         SLOAutoscaler, make_autoscaler)
 from .router import Router
+from .signals import ReplicaView, SignalBus
 from .telemetry import ClusterResult, ClusterTelemetry, SLO
 from .workload import WorkloadSpec
+
+__all__ = ["Fleet", "FleetConfig", "QueueDepthAutoscaler", "SLOAutoscaler",
+           "ScaleDecision", "MigrationCost", "knee_cost", "est_capacity_rps",
+           "run_fleet"]
 
 
 def knee_cost(spec: WorkloadSpec, active_limit: int,
@@ -42,10 +63,9 @@ def knee_cost(spec: WorkloadSpec, active_limit: int,
     scaled-down workload sizes; derives from ``kv_bytes_per_tok`` so the
     knee tracks the cost model instead of a copy-pasted constant."""
     base = StepCostModel()
-    mean_resident = spec.mean_prompt + spec.mean_gen / 2
     return dataclasses.replace(
         base,
-        hbm_budget=oversub * active_limit * mean_resident
+        hbm_budget=oversub * active_limit * spec.mean_resident
         * base.kv_bytes_per_tok)
 
 
@@ -54,17 +74,22 @@ def est_capacity_rps(spec: WorkloadSpec, active_limit: int,
                      cost: Optional[StepCostModel] = None) -> float:
     """Analytic saturation point: full active set, no thrash, no pod mix."""
     cost = cost or StepCostModel()
-    mean_resident = spec.mean_prompt + spec.mean_gen / 2
-    step_ms = cost.step_ms(active_limit, int(active_limit * mean_resident),
-                           0.0)
+    step_ms = cost.step_ms(active_limit,
+                           int(active_limit * spec.mean_resident), 0.0)
     tok_s = active_limit / (step_ms / 1e3)
     return n_replicas * tok_s / spec.mean_gen
 
 
 @dataclass
 class FleetConfig:
-    """Replica-pool shape; every replica is identical (heterogeneous pools
-    are a roadmap follow-on)."""
+    """Replica-pool shape.
+
+    Homogeneous by default; a **heterogeneous pool** (mixed hardware SKUs)
+    is expressed with the per-replica override lists - replica ``i`` takes
+    ``active_limits[i % len(active_limits)]`` / ``costs[i % ...]``, so a
+    short override list tiles across the pool.  Replicas added by an
+    autoscaler (``make_engine()`` with no index) use the scalar defaults.
+    """
 
     n_replicas: int = 4
     admission: str = "gcr"           # none | gcr | gcr_pod
@@ -72,59 +97,40 @@ class FleetConfig:
     n_pods: int = 2
     promote_every: int = 64
     cost: Optional[StepCostModel] = None
+    active_limits: Optional[Sequence[int]] = None   # per-replica override
+    costs: Optional[Sequence[Optional[StepCostModel]]] = None
 
-    def make_engine(self) -> SimServeEngine:
-        adm = make_admission(self.admission, self.active_limit,
+    def limit_for(self, idx: Optional[int] = None) -> int:
+        if self.active_limits and idx is not None:
+            return self.active_limits[idx % len(self.active_limits)]
+        return self.active_limit
+
+    def cost_for(self, idx: Optional[int] = None) -> Optional[StepCostModel]:
+        if self.costs and idx is not None:
+            c = self.costs[idx % len(self.costs)]
+            if c is not None:
+                return c
+        return self.cost
+
+    def make_engine(self, idx: Optional[int] = None) -> SimServeEngine:
+        adm = make_admission(self.admission, self.limit_for(idx),
                              n_pods=self.n_pods,
                              promote_every=self.promote_every)
-        return SimServeEngine(adm, cost=self.cost)
+        return SimServeEngine(adm, cost=self.cost_for(idx))
 
     def make_engines(self) -> List[SimServeEngine]:
-        return [self.make_engine() for _ in range(self.n_replicas)]
-
-
-class QueueDepthAutoscaler:
-    """Scale out when mean parked depth per replica crosses a threshold.
-
-    Deliberately the simplest useful policy - a hook point, not the real
-    thing (see ROADMAP open items).  Scale-in is absent: parked streams
-    cost nothing, so shedding replicas mid-run only loses KV state.
-    """
-
-    def __init__(self, cfg: FleetConfig, max_replicas: int = 8,
-                 parked_per_replica: Optional[float] = None,
-                 cooldown_ms: float = 2000.0) -> None:
-        self.cfg = cfg
-        self.max_replicas = max_replicas
-        # default trigger: a full active set's worth of parked streams
-        self.parked_per_replica = (float(cfg.active_limit)
-                                   if parked_per_replica is None
-                                   else parked_per_replica)
-        self.cooldown_ms = cooldown_ms
-        self._last_scale_ms = -1e18
-
-    def __call__(self, fleet: "Fleet", now_ms: float
-                 ) -> Optional[SimServeEngine]:
-        if len(fleet.replicas) >= self.max_replicas:
-            return None
-        if now_ms - self._last_scale_ms < self.cooldown_ms:
-            return None
-        parked = sum(r.admission.num_parked for r in fleet.replicas)
-        if parked / len(fleet.replicas) <= self.parked_per_replica:
-            return None
-        self._last_scale_ms = now_ms
-        return self.cfg.make_engine()
+        return [self.make_engine(i) for i in range(self.n_replicas)]
 
 
 class Fleet:
-    """N replicas + router + telemetry on one virtual clock."""
+    """N replicas + router + signal bus + telemetry on one virtual clock."""
 
     def __init__(self, replicas: List[SimServeEngine], router: Router,
                  telemetry: Optional[ClusterTelemetry] = None,
-                 autoscaler: Optional[
-                     Callable[["Fleet", float], Optional[SimServeEngine]]
-                 ] = None,
-                 autoscale_every_ms: float = 500.0) -> None:
+                 autoscaler: Optional[Callable] = None,
+                 autoscale_every_ms: float = 500.0,
+                 bus: Optional[SignalBus] = None,
+                 migration: Optional[MigrationCost] = None) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
         self.replicas = replicas
@@ -132,85 +138,205 @@ class Fleet:
         self.telemetry = telemetry or ClusterTelemetry()
         self.autoscaler = autoscaler
         self.autoscale_every_ms = autoscale_every_ms
+        self.bus = bus or SignalBus()
+        self.migration = migration or MigrationCost()
+        self.retired = [False] * len(replicas)
+        # event-loop state (created in run())
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._stepping: List[bool] = []
+        self._step_end: List[float] = []
+        self._work = 0          # pending arrive/step/migrate events
+        self._migrating = 0     # streams in KV transit between replicas
+        self._live_views: List[ReplicaView] = []
+        self._ran = False
+
+    # -- introspection -------------------------------------------------------
+    def live_indices(self) -> List[int]:
+        return [i for i, gone in enumerate(self.retired) if not gone]
+
+    def live_views(self) -> List[ReplicaView]:
+        """Views of routable replicas; cached, rebuilt only on scaling
+        (the arrival hot path must not rescan the pool per event)."""
+        return self._live_views
+
+    def _rebuild_live_views(self) -> None:
+        views = self.bus.views
+        self._live_views = [views[i] for i in self.live_indices()]
+
+    # -- event plumbing ------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        if kind in ("arrive", "step", "migrate"):
+            self._work += 1
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _start_step(self, i: int, t: float) -> None:
+        dt, _done = self.replicas[i].step(t)
+        if dt > 0.0:
+            self._stepping[i] = True
+            self._step_end[i] = t + dt
+            self._push(t + dt, "step", i)
+
+    def _place(self, req: Request, t: float) -> None:
+        i = self.router.route(req, self.live_views())
+        self.replicas[i].submit(req)
+        self.telemetry.sample(i, self.replicas[i])
+        if not self._stepping[i] and self.replicas[i].has_work:
+            self._start_step(i, t)
+
+    # -- scaling -------------------------------------------------------------
+    def _scale_out(self, eng: SimServeEngine, t: float) -> None:
+        self.replicas.append(eng)
+        self._stepping.append(False)
+        self._step_end.append(0.0)
+        self.retired.append(False)
+        idx = self.bus.register(eng, t)
+        self.telemetry.on_spawn(idx, t)
+        self.telemetry.on_scale(t)
+        self._rebuild_live_views()
+        if not self.bus.live:
+            self._push(self.bus.next_publish_ms(t), "publish", idx)
+
+    def _scale_in(self, idx: int, t: float) -> None:
+        if not (0 <= idx < len(self.replicas)) or self.retired[idx]:
+            return
+        if len(self.live_indices()) <= 1:    # never drain the last replica
+            return
+        self.retired[idx] = True
+        self._rebuild_live_views()
+        if not self.bus.live:
+            # final report at decommission: completions since the last
+            # periodic publish must not vanish from controller windows
+            self.bus.publish(idx, t)
+        # an in-flight step's effects are already banked through its end
+        # time, so active streams cannot start migrating (and the replica
+        # cannot stop billing) before that boundary - otherwise a stream
+        # would decode on two replicas over the same virtual interval
+        done_t = self._step_end[idx] if self._stepping[idx] else t
+        active_moved, parked_moved = self.replicas[idx].drain()
+        kv = self.replicas[idx].cost.kv_bytes_per_tok
+        for r in active_moved:
+            dt = self.migration.ms(r.prompt_len + r.generated, kv)
+            self._push(done_t + dt, "migrate", r)
+        for r in parked_moved:
+            # parked streams hold no KV (nothing in flight): handoff only
+            self._push(t + self.migration.ms(0, kv), "migrate", r)
+        self._migrating += len(active_moved) + len(parked_moved)
+        self.telemetry.on_retire(
+            idx, done_t, migrated=len(active_moved) + len(parked_moved))
 
     # -- event loop ----------------------------------------------------------
     def run(self, requests: List[Request], max_ms: float = 120_000.0
             ) -> ClusterResult:
-        heap: list = []
-        seq = itertools.count()
-        stepping = [False] * len(self.replicas)
-        step_end = [0.0] * len(self.replicas)
+        if self._ran:
+            # bus registrations, telemetry, and retirement state are all
+            # one-shot; a silent second run would double-count every signal
+            raise RuntimeError("Fleet.run() is single-use; build a fresh "
+                              "Fleet (or use run_fleet) per run")
+        self._ran = True
+        self._heap = []
+        self._seq = itertools.count()
+        self._stepping = [False] * len(self.replicas)
+        self._step_end = [0.0] * len(self.replicas)
+        self._work = 0
+        self._migrating = 0
 
         # clone on entry: engines mutate Request state in place, and one
         # workload list is typically swept across many policy runs
         for r in sorted(requests, key=lambda r: (r.arrive_ms, r.rid)):
-            heapq.heappush(heap, (r.arrive_ms, next(seq), "arrive",
-                                  r.fresh()))
+            self._push(r.arrive_ms, "arrive", r.fresh())
         if self.autoscaler is not None:
-            heapq.heappush(heap,
-                           (self.autoscale_every_ms, next(seq), "scale", None))
-
-        def start_step(i: int, t: float) -> None:
-            dt, _done = self.replicas[i].step(t)
-            if dt > 0.0:
-                stepping[i] = True
-                step_end[i] = t + dt
-                heapq.heappush(heap, (t + dt, next(seq), "step", i))
+            self._push(self.autoscale_every_ms, "scale", None)
+        for i, eng in enumerate(self.replicas):
+            self.bus.register(eng, 0.0)
+            self.telemetry.on_spawn(i, 0.0)
+        self._rebuild_live_views()
+        if not self.bus.live:
+            for i in range(len(self.replicas)):
+                self._push(self.bus.next_publish_ms(0.0), "publish", i)
 
         now = 0.0
         injected = 0
-        while heap:
-            t, _, kind, payload = heapq.heappop(heap)
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
             if t > max_ms:
                 break
-            if kind != "scale":
+            if kind in ("arrive", "step", "migrate"):
+                self._work -= 1
                 # bookkeeping ticks must not extend the measured duration
                 now = t
             if kind == "arrive":
-                req: Request = payload
                 injected += 1
-                i = self.router.route(req, self.replicas)
-                self.replicas[i].submit(req)
-                self.telemetry.sample(i, self.replicas[i])
-                if not stepping[i] and self.replicas[i].has_work:
-                    start_step(i, t)
+                self.bus.arrivals += 1
+                self._place(payload, t)
             elif kind == "step":
                 i = payload
-                stepping[i] = False
+                self._stepping[i] = False
                 self.telemetry.sample(i, self.replicas[i])
-                if self.replicas[i].has_work:
-                    start_step(i, t)
+                if not self.retired[i] and self.replicas[i].has_work:
+                    self._start_step(i, t)
+            elif kind == "migrate":
+                self._migrating -= 1
+                self._place(payload, t)
+            elif kind == "publish":
+                i = payload
+                if not self.retired[i]:
+                    self.bus.publish(i, t)
+                    if self._work > 0:
+                        self._push(self.bus.next_publish_ms(t), "publish", i)
             elif kind == "scale":
-                new = self.autoscaler(self, t) if self.autoscaler else None
-                if new is not None:
-                    self.replicas.append(new)
-                    stepping.append(False)
-                    step_end.append(0.0)
-                    self.telemetry.on_scale(t)
+                decision = (self.autoscaler(self, t)
+                            if self.autoscaler else None)
+                if isinstance(decision, SimServeEngine):
+                    # legacy hook protocol: a bare engine means scale out
+                    decision = ScaleDecision(add=decision)
+                if decision is not None:
+                    if decision.add is not None:
+                        self._scale_out(decision.add, t)
+                    elif decision.remove is not None:
+                        self._scale_in(decision.remove, t)
                 # keep ticking while any work remains on the heap
-                if any(k in ("arrive", "step") for _, _, k, _ in heap):
-                    heapq.heappush(
-                        heap,
-                        (t + self.autoscale_every_ms, next(seq), "scale",
-                         None))
+                if self._work > 0:
+                    self._push(t + self.autoscale_every_ms, "scale", None)
         # offered = requests that actually arrived before the max_ms cutoff,
-        # so completed + live == offered holds for any (workload, max_ms).
-        # Step effects are banked at step start, so a truncated run must
-        # extend the measured end over in-flight steps - their tokens and
-        # completion stamps are already counted (the single-engine loop has
-        # the same now += dt overshoot past max_ms).
-        end = max([now] + [e for i, e in enumerate(step_end) if stepping[i]])
-        return self.telemetry.finalize(end, self.replicas, injected)
+        # so completed + live + migrating == offered for any (workload,
+        # max_ms).  Step effects are banked at step start, so a truncated
+        # run must extend the measured end over in-flight steps - their
+        # tokens and completion stamps are already counted (the
+        # single-engine loop has the same now += dt overshoot past max_ms).
+        end = max([now] + [e for i, e in enumerate(self._step_end)
+                           if self._stepping[i]])
+        return self.telemetry.finalize(end, self.replicas, injected,
+                                       migrating=self._migrating)
 
 
 def run_fleet(requests: List[Request], router: Router,
               cfg: Optional[FleetConfig] = None,
               slo: Optional[SLO] = None,
-              autoscale: bool = False,
-              max_ms: float = 120_000.0) -> ClusterResult:
-    """One-call convenience wrapper used by benches, tests, and the CLI."""
+              autoscale=False,
+              max_ms: float = 120_000.0,
+              staleness_ms: float = 0.0,
+              jitter_ms: float = 0.0,
+              signal_seed: int = 0,
+              max_replicas: int = 8,
+              rps_per_replica: Optional[float] = None) -> ClusterResult:
+    """One-call convenience wrapper used by benches, tests, and the CLI.
+
+    ``autoscale``: False/None (fixed pool), True/'queue' (queue-depth
+    scale-out hook), 'slo' (SLO-driven controller with scale-in),
+    'predictive' (SLO controller + arrival-trend scaling; wants
+    ``rps_per_replica``), or any ``(fleet, now_ms) -> ScaleDecision``
+    callable.  ``staleness_ms`` > 0 makes every routing/scaling signal
+    come from the bus's last published report (plus uniform
+    ``jitter_ms`` per publish, seeded by ``signal_seed``).
+    """
     cfg = cfg or FleetConfig()
-    telem = ClusterTelemetry(slo or SLO())
-    scaler = QueueDepthAutoscaler(cfg) if autoscale else None
-    fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler)
+    slo = slo or SLO()
+    telem = ClusterTelemetry(slo)
+    bus = SignalBus(slo=slo, period_ms=staleness_ms, jitter_ms=jitter_ms,
+                    seed=signal_seed)
+    scaler = make_autoscaler(autoscale, cfg, rps_per_replica=rps_per_replica,
+                             max_replicas=max_replicas)
+    fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
+                  bus=bus)
     return fleet.run(requests, max_ms=max_ms)

@@ -1,4 +1,4 @@
-"""Pluggable fleet routing policies (DESIGN.md L2).
+"""Pluggable fleet routing policies (DESIGN.md 7).
 
 The router is the cluster's analogue of the paper's lock-acquisition path:
 every arriving stream must be placed on *some* replica, and a policy that
@@ -6,26 +6,37 @@ ignores per-replica active-set occupancy recreates lock-style collapse one
 level up - it keeps feeding replicas whose batch is already past the HBM
 knee, exactly like threads piling onto a saturated lock.
 
+Routers never touch engines: they read ``signals.ReplicaView`` accessors,
+i.e. each replica's *last published* occupancy report (live and exact only
+when the signal bus is omniscient).  The fleet passes views for live
+(non-retired) replicas only; policies return ``view.idx``.
+
 * ``round_robin``       - occupancy-blind; the collapse baseline;
 * ``least_outstanding`` - classic least-loaded by outstanding streams;
+  deliberately **capacity-blind**: on heterogeneous pools it equalizes
+  queue lengths across unequal replicas and drowns the small ones;
 * ``p2c``               - power-of-two-choices (seeded sampling);
-* ``gcr_aware``         - reads each replica's GCR admission state
+* ``gcr_aware``         - reads each replica's GCR admission signals
   (``num_active`` / ``active_limit`` / ``num_parked``) and applies pod
   affinity: the GCR-NUMA/GCR-POD preferred-socket construction lifted to
   replica placement.  Replicas are statically partitioned among pods
   (replica ``i`` serves pod ``i % n_pods``), so each replica's active set
   stays pod-pure and never pays the cross-pod mixing penalty; within the
-  partition the router fills active-set headroom first and only then parks
-  on the shortest passive queue.
+  partition the router is **capacity-aware** - it fills the active set
+  with the most *normalized* headroom (headroom / active_limit) first and
+  only then parks on the shortest limit-normalized passive queue, so a
+  mixed pool (heterogeneous active limits) loads replicas in proportion
+  to what they can actually absorb.  On homogeneous pools normalization
+  divides by a common constant and the placement order is unchanged.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Sequence
 
 import numpy as np
 
-from ..serving.engine import Request, SimServeEngine
+from .signals import ReplicaView
 
 ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware")
 
@@ -33,13 +44,15 @@ ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware")
 class Router:
     """Route every arriving request to a replica index.
 
-    ``replicas`` is the fleet's live engine list; it may *grow* between
-    calls (autoscaler), so policies must index it afresh each time.
+    ``views`` covers the fleet's *live* replicas; the list may grow or
+    shrink between calls (autoscaler), so policies must index it afresh
+    each time and return ``view.idx`` (the fleet-wide replica index),
+    never a position in ``views``.
     """
 
     name = "base"
 
-    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
         raise NotImplementedError
 
 
@@ -51,10 +64,10 @@ class RoundRobinRouter(Router):
     def __init__(self) -> None:
         self._i = 0
 
-    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
-        i = self._i % len(replicas)
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        v = views[self._i % len(views)]
         self._i += 1
-        return i
+        return v.idx
 
 
 class LeastOutstandingRouter(Router):
@@ -62,9 +75,8 @@ class LeastOutstandingRouter(Router):
 
     name = "least_outstanding"
 
-    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
-        return min(range(len(replicas)),
-                   key=lambda i: (replicas[i].outstanding, i))
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        return min(views, key=lambda v: (v.outstanding, v.idx)).idx
 
 
 class PowerOfTwoRouter(Router):
@@ -75,18 +87,20 @@ class PowerOfTwoRouter(Router):
     def __init__(self, seed: int = 0) -> None:
         self._rng = np.random.default_rng(seed)
 
-    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
-        n = len(replicas)
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        n = len(views)
         if n == 1:
-            return 0
+            return views[0].idx
         i, j = (int(x) for x in self._rng.choice(n, size=2, replace=False))
-        if (replicas[j].outstanding, j) < (replicas[i].outstanding, i):
-            return j
-        return i
+        a, b = views[i], views[j]
+        if (b.outstanding, b.idx) < (a.outstanding, a.idx):
+            return b.idx
+        return a.idx
 
 
 class GCRAwareRouter(Router):
-    """Occupancy-aware, pod-affine placement (GCR-POD at the fleet layer).
+    """Occupancy- and capacity-aware, pod-affine placement (GCR-POD at the
+    fleet layer).
 
     Falls back gracefully on replicas without admission limits
     (``NoAdmission``): there is no headroom signal, so within the pod
@@ -98,29 +112,25 @@ class GCRAwareRouter(Router):
     def __init__(self, n_pods: int = 2) -> None:
         self.n_pods = max(1, n_pods)
 
-    def _partition(self, pod: int, n: int) -> List[int]:
-        group = [i for i in range(n) if i % self.n_pods == pod % self.n_pods]
-        return group or list(range(n))
+    def _partition(self, pod: int,
+                   views: Sequence[ReplicaView]) -> List[ReplicaView]:
+        group = [v for v in views if v.idx % self.n_pods == pod % self.n_pods]
+        return group or list(views)
 
-    @staticmethod
-    def _headroom(eng: SimServeEngine) -> Optional[int]:
-        limit = getattr(eng.admission, "active_limit", None)
-        if limit is None:
-            return None
-        return limit - eng.admission.num_active
-
-    def route(self, req: Request, replicas: List[SimServeEngine]) -> int:
-        group = self._partition(req.pod, len(replicas))
-        head = {i: self._headroom(replicas[i]) for i in group}
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        group = self._partition(req.pod, views)
+        head = {v.idx: v.headroom for v in group}
         if any(h is None for h in head.values()):
             # unlimited replicas in the pool: least-outstanding in-pod
-            return min(group, key=lambda i: (replicas[i].outstanding, i))
-        free = [i for i in group if head[i] > 0]
+            return min(group, key=lambda v: (v.outstanding, v.idx)).idx
+        free = [v for v in group if head[v.idx] > 0]
         if free:
-            # fill the emptiest active set first
-            return min(free, key=lambda i: (-head[i], i))
-        # all at their limit: park on the shortest passive queue
-        return min(group, key=lambda i: (replicas[i].admission.num_parked, i))
+            # fill the (proportionally) emptiest active set first
+            return min(free, key=lambda v: (-head[v.idx] / v.active_limit,
+                                            v.idx)).idx
+        # all at their limit: park on the shortest normalized passive queue
+        return min(group, key=lambda v: (v.num_parked / v.active_limit,
+                                         v.idx)).idx
 
 
 def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:

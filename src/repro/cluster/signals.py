@@ -1,0 +1,184 @@
+"""Replica metrics bus: stale, sampled occupancy signals (DESIGN.md 7).
+
+The paper's GCR wrapper decides admission from cheap, slightly-stale
+observations of the active set rather than a perfectly synchronized view,
+and stays robust when those signals lag reality (Malthusian Locks makes
+the same point for passivation policies).  A fleet router is in exactly
+that position: a real load balancer scrapes per-replica metrics on a
+period and routes on the last report it saw, not on the replica's state
+this instant.  This module models that signal path:
+
+* ``ReplicaReport``  - one replica's published occupancy/progress counters,
+  stamped with the virtual time it was captured;
+* ``SignalBus``      - holds the last published report per replica.  With
+  ``period_ms > 0`` every consumer (router *and* autoscaler) reads
+  replica-side state that is stale by up to one publish period, plus
+  optional per-publish sampling jitter (seeded, deterministic); only the
+  LB-local arrival counter stays fresh.  ``period_ms == 0`` is the
+  omniscient live bus and reproduces the pre-bus routing bit-exactly;
+* ``ReplicaView``    - the router-facing occupancy accessor: live-engine
+  reads on the live bus, frozen-report reads otherwise.  ``active_limit``
+  is configuration, not telemetry, so it is never stale.
+
+Publish events are sequenced by the fleet's event heap (``fleet.py``), so
+staleness interacts with arrivals/steps deterministically under a seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..serving.engine import SimServeEngine
+from .telemetry import SLO
+
+
+@dataclass(frozen=True)
+class ReplicaReport:
+    """One replica's counters as of its last publish (cumulative except
+    the occupancy gauges)."""
+
+    t_ms: float                   # virtual time the report was captured
+    num_active: int
+    num_parked: int
+    active_limit: Optional[int]   # None => unlimited (NoAdmission)
+    outstanding: int
+    tokens_out: int
+    completed: int
+    slo_met: int                  # completions that met the bus's SLO
+
+
+class ReplicaView:
+    """Occupancy of one replica *as the router is allowed to see it*.
+
+    On the live bus every property reads the engine directly (omniscient,
+    the pre-bus behavior); otherwise properties read the last published
+    ``ReplicaReport``.  ``idx`` is the replica's index in the fleet's
+    replica list - routers return it as their placement decision.
+    """
+
+    __slots__ = ("idx", "_bus")
+
+    def __init__(self, idx: int, bus: "SignalBus") -> None:
+        self.idx = idx
+        self._bus = bus
+
+    @property
+    def num_active(self) -> int:
+        if self._bus.live:
+            return len(self._bus.engines[self.idx].active)
+        return self._bus.reports[self.idx].num_active
+
+    @property
+    def num_parked(self) -> int:
+        if self._bus.live:
+            return self._bus.engines[self.idx].admission.num_parked
+        return self._bus.reports[self.idx].num_parked
+
+    @property
+    def outstanding(self) -> int:
+        if self._bus.live:
+            return self._bus.engines[self.idx].outstanding
+        return self._bus.reports[self.idx].outstanding
+
+    @property
+    def active_limit(self) -> Optional[int]:
+        # static configuration; reading it live is not cheating
+        return getattr(self._bus.engines[self.idx].admission,
+                       "active_limit", None)
+
+    @property
+    def headroom(self) -> Optional[int]:
+        """Active-set slots left, by the last signal; None if unlimited.
+        May be negative under staleness - the replica filled up since."""
+        limit = self.active_limit
+        if limit is None:
+            return None
+        return limit - self.num_active
+
+
+class SignalBus:
+    """Last-published-report store + publish scheduling policy.
+
+    ``period_ms`` is the publish period (the router's worst-case signal
+    staleness); ``jitter_ms`` adds a seeded uniform extra delay to every
+    publish, modeling unsynchronized metric scrapes.  All randomness flows
+    from one seeded generator and publish events are totally ordered by
+    the fleet heap, so runs are exactly reproducible.
+    """
+
+    def __init__(self, slo: Optional[SLO] = None, period_ms: float = 0.0,
+                 jitter_ms: float = 0.0, seed: int = 0) -> None:
+        if period_ms < 0.0 or jitter_ms < 0.0:
+            raise ValueError("period_ms/jitter_ms must be >= 0")
+        self.slo = slo or SLO()
+        self.period_ms = period_ms
+        self.jitter_ms = jitter_ms
+        self._rng = np.random.default_rng(seed)
+        self.engines: List[SimServeEngine] = []
+        self.reports: List[ReplicaReport] = []
+        self.views: List[ReplicaView] = []
+        self._scan_n: List[int] = []      # completions already SLO-scanned
+        self._slo_met: List[int] = []
+        # cumulative fleet arrivals.  Deliberately NOT stale: the router
+        # and controller live in the load balancer, which counts arrivals
+        # first-hand - only *replica-side* state has to cross the bus.
+        self.arrivals = 0
+
+    @property
+    def live(self) -> bool:
+        """True => consumers read engines directly (omniscient bus)."""
+        return self.period_ms <= 0.0
+
+    # -- replica lifecycle ---------------------------------------------------
+    def register(self, engine: SimServeEngine, now_ms: float) -> int:
+        """Add a replica; captures its initial (cold) report at ``now_ms``."""
+        idx = len(self.engines)
+        self.engines.append(engine)
+        self._scan_n.append(0)
+        self._slo_met.append(0)
+        self.views.append(ReplicaView(idx, self))
+        self.reports.append(self._capture(idx, now_ms))
+        return idx
+
+    # -- publishing ----------------------------------------------------------
+    def _capture(self, idx: int, now_ms: float) -> ReplicaReport:
+        eng = self.engines[idx]
+        occ = eng.occupancy()
+        new = eng.completed[self._scan_n[idx]:]
+        if new:
+            self._slo_met[idx] += sum(1 for r in new if self.slo.met(r))
+            self._scan_n[idx] += len(new)
+        return ReplicaReport(
+            t_ms=now_ms,
+            num_active=occ["num_active"],
+            num_parked=occ["num_parked"],
+            active_limit=occ["active_limit"],
+            outstanding=occ["outstanding"],
+            tokens_out=occ["tokens_out"],
+            completed=occ["completed"],
+            slo_met=self._slo_met[idx])
+
+    def publish(self, idx: int, now_ms: float) -> None:
+        """Capture replica ``idx``'s state; consumers see it from now on."""
+        self.reports[idx] = self._capture(idx, now_ms)
+
+    def next_publish_ms(self, now_ms: float) -> float:
+        """Schedule the publish after one at ``now_ms`` (period + jitter)."""
+        dt = self.period_ms
+        if self.jitter_ms > 0.0:
+            dt += float(self._rng.uniform(0.0, self.jitter_ms))
+        return now_ms + dt
+
+    # -- controller-facing reads ---------------------------------------------
+    def snapshot(self, now_ms: float, indices: Sequence[int]
+                 ) -> List[ReplicaReport]:
+        """Reports for ``indices``.  On the live bus this captures fresh
+        reports first, so the controller's 'stale' view degrades to
+        omniscient exactly when the router's does."""
+        if self.live:
+            for i in indices:
+                self.publish(i, now_ms)
+        return [self.reports[i] for i in indices]

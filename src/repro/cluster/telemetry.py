@@ -1,4 +1,4 @@
-"""Cluster-level SLO telemetry (DESIGN.md L2).
+"""Cluster-level SLO telemetry (DESIGN.md 7).
 
 Collapse at fleet scale is invisible in mean throughput until it is
 catastrophic; it shows up first in the latency tail and in *goodput* -
@@ -7,15 +7,20 @@ tokens delivered by requests that met their SLO.  This module aggregates:
 * TTFT p50/p95/p99 and per-token decode latency p50/p95/p99;
 * goodput-under-SLO (tok/s from SLO-met requests only) and attainment;
 * per-replica active/parked occupancy (end-of-run and peak), the direct
-  observable the GCR-aware router steers on.
+  observable the GCR-aware router steers on;
+* replica lifecycle (spawn/retire times) and the integrated
+  **replica-ms** bill - the cost metric a scale-in policy must beat a
+  scale-out-only policy on.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List
 
-from ..serving.engine import Request, SimServeEngine
+from ..serving.engine import Request, SimServeEngine, percentile
+
+__all__ = ["SLO", "ClusterResult", "ClusterTelemetry", "percentile"]
 
 
 @dataclass(frozen=True)
@@ -32,14 +37,6 @@ class SLO:
             return False
         decode_ms = r.done_ms - r.first_token_ms
         return decode_ms / max(1, r.gen_len - 1) <= self.per_token_ms
-
-
-def percentile(sorted_vals: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile over an ascending-sorted sequence."""
-    if not sorted_vals:
-        return 0.0
-    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
-    return float(sorted_vals[idx])
 
 
 @dataclass
@@ -67,7 +64,8 @@ class ClusterResult:
                 f"slo={self.slo_attainment:.0%} "
                 f"ttft_p99={self.ttft_p99_ms:,.0f}ms "
                 f"tpt_p99={self.per_token_p99_ms:.1f}ms "
-                f"replicas={len(self.per_replica)}")
+                f"replicas={len(self.per_replica)} "
+                f"replica_s={self.stats.get('replica_ms', 0.0) / 1e3:,.1f}")
 
 
 class ClusterTelemetry:
@@ -81,6 +79,10 @@ class ClusterTelemetry:
         self.peak_active: Dict[int, int] = {}
         self.peak_parked: Dict[int, int] = {}
         self.scale_events: List[float] = []
+        self.scale_in_events: List[float] = []
+        self.spawn_ms: Dict[int, float] = {}
+        self.retire_ms: Dict[int, float] = {}
+        self.migrated = 0
 
     def sample(self, idx: int, eng: SimServeEngine) -> None:
         a = len(eng.active)
@@ -93,8 +95,16 @@ class ClusterTelemetry:
     def on_scale(self, now_ms: float) -> None:
         self.scale_events.append(now_ms)
 
+    def on_spawn(self, idx: int, now_ms: float) -> None:
+        self.spawn_ms[idx] = now_ms
+
+    def on_retire(self, idx: int, now_ms: float, migrated: int = 0) -> None:
+        self.retire_ms[idx] = now_ms
+        self.scale_in_events.append(now_ms)
+        self.migrated += migrated
+
     def finalize(self, now_ms: float, replicas: List[SimServeEngine],
-                 offered: int) -> ClusterResult:
+                 offered: int, migrating: int = 0) -> ClusterResult:
         completed: List[Request] = []
         for eng in replicas:
             completed.extend(eng.completed)
@@ -109,7 +119,14 @@ class ClusterTelemetry:
         dur_s = max(now_ms, 1e-9) / 1e3
 
         per_replica = []
+        replica_ms = 0.0
         for i, eng in enumerate(replicas):
+            spawn = self.spawn_ms.get(i, 0.0)
+            retire = self.retire_ms.get(i, -1.0)
+            # spawn/retire land on bookkeeping ticks that may sit past the
+            # last measured event, so clamp each lifetime term at >= 0
+            life = max(0.0, (retire if retire >= 0.0 else now_ms) - spawn)
+            replica_ms += life
             per_replica.append({
                 "tokens": eng.tokens_out,
                 "completed": len(eng.completed),
@@ -119,6 +136,9 @@ class ClusterTelemetry:
                 "peak_parked": self.peak_parked.get(i, 0),
                 "promotions": getattr(eng.admission, "stat_promotions", 0),
                 "demotions": getattr(eng.admission, "stat_demotions", 0),
+                "spawn_ms": spawn,
+                "retire_ms": retire,
+                "life_ms": life,
             })
 
         return ClusterResult(
@@ -136,5 +156,9 @@ class ClusterTelemetry:
             per_token_p95_ms=percentile(per_tok, 0.95),
             per_token_p99_ms=percentile(per_tok, 0.99),
             per_replica=per_replica,
-            stats={"scale_events": len(self.scale_events)},
+            stats={"scale_events": len(self.scale_events),
+                   "scale_in_events": len(self.scale_in_events),
+                   "migrated": self.migrated,
+                   "migrating_end": migrating,
+                   "replica_ms": replica_ms},
         )

@@ -49,6 +49,12 @@ class WorkloadSpec:
     def mean_gen(self) -> float:
         return 0.5 * (self.gen_range[0] + self.gen_range[1])
 
+    @property
+    def mean_resident(self) -> float:
+        """Mean KV-resident tokens of an in-flight request (full prompt +
+        half the generation) - the footprint capacity math keys off."""
+        return self.mean_prompt + self.mean_gen / 2
+
 
 DEFAULT_SPEC = WorkloadSpec()
 

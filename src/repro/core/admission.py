@@ -87,6 +87,13 @@ class GCRAdmission:
         self.queue = deque(s for s in self.queue
                            if s.stream_id != stream_id)
 
+    def drain(self) -> None:
+        """Evacuate all live state (active set + passive queues) - the
+        replica behind this admission is being decommissioned.  Counters
+        (completions/steps/stats) survive for telemetry."""
+        self.active.clear()
+        self.queue.clear()
+
     def _admit_head(self) -> Optional[int]:
         st = self._pop_head()
         if st is None:
@@ -161,6 +168,9 @@ class NoAdmission:
 
     def tick(self) -> None:
         self.step += 1
+
+    def drain(self) -> None:
+        self.active.clear()
 
     @property
     def num_active(self) -> int:

@@ -98,6 +98,11 @@ class GCRPod(GCRAdmission):
             self.pod_queues[i] = deque(s for s in q
                                        if s.stream_id != stream_id)
 
+    def drain(self) -> None:
+        self.active.clear()
+        for q in self.pod_queues:
+            q.clear()
+
     @property
     def num_parked(self) -> int:
         return sum(len(q) for q in self.pod_queues)

@@ -40,14 +40,24 @@ def main() -> None:
     ap.add_argument("--workload", default="poisson", choices=WORKLOADS)
     ap.add_argument("--rps", type=float, default=500.0)
     ap.add_argument("--duration-ms", type=float, default=5_000.0)
-    ap.add_argument("--autoscale", action="store_true",
-                    help="enable the queue-depth scale-out hook")
+    ap.add_argument("--autoscale", nargs="?", const="queue", default=None,
+                    choices=["queue", "slo", "predictive"],
+                    help="autoscaler policy; bare --autoscale keeps the "
+                         "legacy queue-depth scale-out hook, slo/predictive "
+                         "run the SLO controller (with KV-migration "
+                         "scale-in)")
+    ap.add_argument("--max-replicas", type=int, default=8)
+    ap.add_argument("--staleness-ms", type=float, default=0.0,
+                    help="signal-bus publish period: routers/controllers "
+                         "see occupancy up to this stale (0 = omniscient)")
+    ap.add_argument("--signal-jitter-ms", type=float, default=0.0,
+                    help="seeded uniform extra delay per metrics publish")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.cluster:
-        from ..cluster import (FleetConfig, WorkloadSpec, make_router,
-                               make_workload, run_fleet)
+        from ..cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
+                               make_router, make_workload, run_fleet)
 
         spec = WorkloadSpec()
         cfg = FleetConfig(n_replicas=args.replicas,
@@ -55,18 +65,31 @@ def main() -> None:
                           active_limit=args.active_limit)
         reqs = make_workload(args.workload, args.rps, args.duration_ms,
                              spec, args.seed)
+        rpr = est_capacity_rps(spec, args.active_limit, 1)
         res = run_fleet(reqs, make_router(args.router, seed=args.seed),
-                        cfg, autoscale=args.autoscale)
+                        cfg, autoscale=args.autoscale,
+                        max_replicas=args.max_replicas,
+                        staleness_ms=args.staleness_ms,
+                        jitter_ms=args.signal_jitter_ms,
+                        signal_seed=args.seed,
+                        rps_per_replica=rpr)
         print(f"router={args.router} admission={args.admission} "
-              f"workload={args.workload} rps={args.rps:g}")
+              f"workload={args.workload} rps={args.rps:g} "
+              f"staleness={args.staleness_ms:g}ms "
+              f"autoscale={args.autoscale or 'off'}")
         print(res.summary())
+        print(f"scale: out={res.stats['scale_events']:.0f} "
+              f"in={res.stats['scale_in_events']:.0f} "
+              f"migrated={res.stats['migrated']:.0f} "
+              f"replica_s={res.stats['replica_ms'] / 1e3:,.1f}")
         hdr = (f"{'replica':>8} {'tokens':>10} {'done':>6} {'active':>7} "
-               f"{'parked':>7} {'peak_a':>7} {'peak_p':>7}")
+               f"{'parked':>7} {'peak_a':>7} {'peak_p':>7} {'life_s':>7}")
         print(hdr)
         for i, r in enumerate(res.per_replica):
             print(f"{i:>8} {r['tokens']:>10,} {r['completed']:>6} "
                   f"{r['active_end']:>7} {r['parked_end']:>7} "
-                  f"{r['peak_active']:>7} {r['peak_parked']:>7}")
+                  f"{r['peak_active']:>7} {r['peak_parked']:>7} "
+                  f"{r['life_ms'] / 1e3:>7.1f}")
         return
 
     if args.fleet_sweep:

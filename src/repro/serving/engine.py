@@ -24,13 +24,27 @@ Step-cost model (per decode step over the active batch):
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.admission import GCRAdmission, NoAdmission
 from ..core.pod_aware import GCRPod
+
+
+def percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile over an ascending-sorted sequence: the
+    smallest value with at least ``q`` of the mass at or below it, i.e.
+    index ``ceil(q*n) - 1`` (the epsilon guards float noise like
+    0.99 * 100 -> 99.00000000000001).  Shared by the engine's ServeResult
+    and the cluster telemetry so both layers report the same statistic."""
+    if not sorted_vals:
+        return 0.0
+    n = len(sorted_vals)
+    idx = min(n - 1, max(0, math.ceil(q * n - 1e-9) - 1))
+    return float(sorted_vals[idx])
 
 
 @dataclass
@@ -135,6 +149,37 @@ class SimServeEngine:
         """Streams on this replica that have not finished (active + parked)."""
         return len(self.active) + self.admission.num_parked
 
+    def occupancy(self) -> Dict[str, Optional[int]]:
+        """Cheap occupancy/progress counters for the cluster metrics bus
+        (``cluster.signals``).  This is what the replica *publishes*; a
+        router reading a stale copy of it is the modeled reality."""
+        return {
+            "num_active": len(self.active),
+            "num_parked": self.admission.num_parked,
+            "active_limit": getattr(self.admission, "active_limit", None),
+            "outstanding": self.outstanding,
+            "tokens_out": self.tokens_out,
+            "completed": len(self.completed),
+        }
+
+    def drain(self) -> tuple:
+        """Evacuate every unfinished stream (fleet scale-in): returns
+        ``(active_moved, parked_moved)`` and leaves the engine empty of
+        live work.  Finished requests and token counts stay behind for
+        telemetry.  Active streams carry resident KV (the migration cost
+        the fleet charges); parked streams hold none."""
+        active_moved: List[Request] = []
+        parked_moved: List[Request] = []
+        for r in self.requests.values():
+            if r.done_ms >= 0:
+                continue
+            (active_moved if r.rid in self.active else parked_moved).append(r)
+        for r in active_moved + parked_moved:
+            del self.requests[r.rid]
+        self.active.clear()
+        self.admission.drain()
+        return active_moved, parked_moved
+
     def step(self, now: float) -> tuple:
         """One decode step over the active batch, starting at virtual time
         ``now``.  Returns ``(dt_ms, finished_requests)``; finished requests
@@ -229,8 +274,8 @@ class SimServeEngine:
             sim_ms=now,
             token_throughput=self.tokens_out / dur_s,
             request_throughput=len(completed) / dur_s,
-            p50_latency_ms=lat[len(lat) // 2],
-            p99_latency_ms=lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+            p50_latency_ms=percentile(lat, 0.50),
+            p99_latency_ms=percentile(lat, 0.99),
             mean_ttft_ms=float(np.mean(ttft)),
             unfairness=unfair,
             stats={

@@ -10,11 +10,13 @@ import dataclasses
 import pytest
 
 from repro.cluster import (SLO, Fleet, FleetConfig, ClusterTelemetry,
-                           QueueDepthAutoscaler, WorkloadSpec, bursty,
-                           diurnal, est_capacity_rps, knee_cost, make_router,
-                           make_workload, poisson, replay, run_fleet,
-                           uniform)
+                           QueueDepthAutoscaler, ScaleDecision, SignalBus,
+                           SLOAutoscaler, WorkloadSpec, bursty, diurnal,
+                           est_capacity_rps, knee_cost, make_router,
+                           make_workload, percentile, poisson, replay,
+                           run_fleet, uniform)
 from repro.cluster.router import ROUTERS
+from repro.serving.engine import Request
 
 SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
 LIMIT = 32
@@ -183,3 +185,228 @@ def test_diurnal_ramp_exercises_idle_and_busy():
     live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
     assert res.completed + live == res.offered
     assert res.token_throughput > 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry: nearest-rank percentile
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    """p50 of 2 samples is the FIRST (rank ceil(0.5*2)=1), not the max -
+    the old int(q*n) index returned the max here."""
+    assert percentile([1.0, 2.0], 0.50) == 1.0
+    assert percentile([1.0, 2.0], 0.95) == 2.0
+    vals = [float(v) for v in range(1, 101)]
+    assert percentile(vals, 0.50) == 50.0
+    assert percentile(vals, 0.95) == 95.0
+    assert percentile(vals, 0.99) == 99.0
+    assert percentile(vals, 1.00) == 100.0
+    assert percentile([], 0.5) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# signal bus: staleness, jitter, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_signal_bus_live_vs_stale_reads():
+    """A stale bus serves the last published report; the live bus tracks
+    the engine instant-by-instant."""
+    eng = _cfg().make_engine(0)
+    live = SignalBus(period_ms=0.0)
+    stale = SignalBus(period_ms=100.0)
+    li = live.register(eng, 0.0)
+    si = stale.register(eng, 0.0)
+    eng.submit(Request(rid=0, prompt_len=16, gen_len=4))
+    assert live.views[li].num_active == 1
+    assert stale.views[si].num_active == 0      # still the t=0 cold report
+    assert stale.views[si].headroom == LIMIT
+    stale.publish(si, 100.0)
+    assert stale.views[si].num_active == 1
+    assert stale.reports[si].t_ms == 100.0
+    # active_limit is configuration, never stale
+    assert stale.views[si].active_limit == LIMIT
+
+
+def test_stale_routing_deterministic_and_conserving():
+    """Same seed => bit-identical ClusterResult through the stale-signals
+    path (publish events, jitter draws, and router reads all sequenced)."""
+    reqs = bursty(2 * SAT_RPS, 1200.0, SPEC, seed=13)
+
+    def go():
+        return run_fleet(reqs, make_router("gcr_aware", n_pods=2),
+                         _cfg(n_replicas=4), max_ms=60_000.0,
+                         staleness_ms=80.0, jitter_ms=15.0, signal_seed=5)
+
+    a, b = go(), go()
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    live = sum(r["active_end"] + r["parked_end"] for r in a.per_replica)
+    assert a.completed + live + a.stats["migrating_end"] == a.offered
+    # staleness must not lose or forge requests vs the omniscient run
+    omni = run_fleet(reqs, make_router("gcr_aware", n_pods=2),
+                     _cfg(n_replicas=4), max_ms=60_000.0)
+    assert omni.offered == a.offered
+    assert omni.completed == a.completed
+
+
+# ---------------------------------------------------------------------------
+# controller: scale-in, migration, truncation conservation
+# ---------------------------------------------------------------------------
+
+
+def _forced_scale_in(remove_idx, at_tick=1):
+    """Autoscaler stub: retire ``remove_idx`` on the ``at_tick``-th tick."""
+    state = {"n": 0}
+
+    def scaler(fleet, now_ms):
+        state["n"] += 1
+        if state["n"] == at_tick:
+            return ScaleDecision(remove=remove_idx, reason="forced")
+        return None
+
+    return scaler
+
+
+def test_scale_in_migrates_streams_and_conserves():
+    reqs = poisson(SAT_RPS, 1200.0, SPEC, seed=3)
+    cfg = _cfg(n_replicas=3)
+    fleet = Fleet(cfg.make_engines(), make_router("gcr_aware", n_pods=2),
+                  ClusterTelemetry(SLO()),
+                  autoscaler=_forced_scale_in(2), autoscale_every_ms=200.0)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    assert fleet.retired[2]
+    assert res.stats["scale_in_events"] == 1
+    assert res.stats["migrated"] > 0
+    # drained replica holds no live work; its finished tokens stay counted
+    assert res.per_replica[2]["active_end"] == 0
+    assert res.per_replica[2]["parked_end"] == 0
+    assert 0 <= res.per_replica[2]["retire_ms"] <= res.sim_ms
+    # run drains fully: every migrated stream finished somewhere else
+    assert res.completed == res.offered
+    assert res.stats["migrating_end"] == 0
+    # the retiree's lifetime is billed only up to its retirement
+    assert res.per_replica[2]["life_ms"] < res.sim_ms
+    assert res.stats["replica_ms"] < 3 * res.sim_ms
+    # migrated rids landed on exactly one surviving replica
+    seen = []
+    for eng in fleet.replicas:
+        seen.extend(eng.requests.keys())
+    assert len(seen) == len(set(seen)) == len(reqs)
+
+
+def test_scale_in_never_drains_last_replica():
+    reqs = poisson(SAT_RPS, 600.0, SPEC, seed=5)
+    cfg = _cfg(n_replicas=2)
+    fleet = Fleet(cfg.make_engines(), make_router("gcr_aware", n_pods=2),
+                  ClusterTelemetry(SLO()),
+                  autoscaler=lambda f, t: ScaleDecision(
+                      remove=f.live_indices()[0]),
+                  autoscale_every_ms=100.0)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    assert len(fleet.live_indices()) == 1      # one survivor, always
+    assert res.completed == res.offered
+
+
+def test_truncation_mid_scale_conserves_requests():
+    """completed + live + in-migration == offered at ANY max_ms cutoff,
+    including cutoffs landing mid-migration while the SLO controller is
+    actively scaling the diurnal ramp."""
+    cap0 = est_capacity_rps(SPEC, LIMIT, 2, COST)
+    reqs = diurnal(2.5 * cap0, 6000.0, SPEC, seed=5)
+    cfg = _cfg(n_replicas=2)
+    for max_ms in (700.0, 1500.0, 2500.0, 4000.0, 5500.0):
+        scaler = SLOAutoscaler(cfg, max_replicas=5, predictive=True,
+                               rps_per_replica=cap0 / 2,
+                               cooldown_in_ms=400.0, scale_in_util=0.9,
+                               cooldown_out_ms=400.0, lead_ms=2000.0)
+        fleet = Fleet(cfg.make_engines(),
+                      make_router("gcr_aware", n_pods=2),
+                      ClusterTelemetry(SLO()), autoscaler=scaler,
+                      autoscale_every_ms=200.0)
+        res = fleet.run(reqs, max_ms=max_ms)
+        live = sum(r["active_end"] + r["parked_end"]
+                   for r in res.per_replica)
+        assert res.completed + live + res.stats["migrating_end"] \
+            == res.offered, f"cutoff {max_ms}"
+        assert 0 < res.offered <= len(reqs)
+    # the sweep must actually exercise scaling on this workload
+    assert res.stats["scale_events"] > 0
+
+
+def test_truncation_mid_migration_counts_streams_in_transit():
+    """A cutoff landing while streams are in KV transit: they are on no
+    replica, so conservation must count ``migrating_end``."""
+    from repro.cluster import MigrationCost
+    reqs = poisson(2 * SAT_RPS, 400.0, SPEC, seed=6)
+    cfg = _cfg(n_replicas=3)
+    fleet = Fleet(cfg.make_engines(), make_router("gcr_aware", n_pods=2),
+                  ClusterTelemetry(SLO()),
+                  autoscaler=_forced_scale_in(2), autoscale_every_ms=200.0,
+                  # slow link: every drained stream is still in transit
+                  # when the run is cut 50 ms after the scale tick
+                  migration=MigrationCost(base_ms=400.0,
+                                          bw_bytes_per_ms=1e6))
+    res = fleet.run(reqs, max_ms=250.0)
+    assert res.stats["scale_in_events"] == 1
+    assert res.stats["migrating_end"] > 0
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live + res.stats["migrating_end"] == res.offered
+
+
+def test_slo_autoscaler_deterministic():
+    cap0 = est_capacity_rps(SPEC, LIMIT, 2, COST)
+    reqs = diurnal(2.5 * cap0, 5000.0, SPEC, seed=8)
+
+    def go():
+        return run_fleet(reqs, make_router("gcr_aware", n_pods=2),
+                         _cfg(n_replicas=2), autoscale="predictive",
+                         max_replicas=5, rps_per_replica=cap0 / 2,
+                         max_ms=60_000.0, staleness_ms=60.0, jitter_ms=10.0)
+
+    a, b = go(), go()
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous pools
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_config_per_replica_overrides():
+    spec1 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=1)
+    limits = [64, 16]
+    costs = [knee_cost(spec1, l) for l in limits]
+    cfg = FleetConfig(n_replicas=4, admission="gcr", active_limit=64,
+                      n_pods=1, active_limits=limits, costs=costs)
+    # short override lists tile across the pool
+    assert [cfg.limit_for(i) for i in range(4)] == [64, 16, 64, 16]
+    assert cfg.cost_for(1).hbm_budget == costs[1].hbm_budget
+    engines = cfg.make_engines()
+    assert [e.admission.active_limit for e in engines] == [64, 16, 64, 16]
+    # autoscaler-spawned replicas use the scalar defaults
+    assert cfg.make_engine().admission.active_limit == 64
+    assert cfg.limit_for(None) == 64
+
+
+def test_capacity_aware_routing_beats_blind_on_mixed_pool():
+    spec1 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=1)
+    limits = [64, 16]
+    costs = [knee_cost(spec1, l) for l in limits]
+    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=64,
+                      n_pods=1, active_limits=limits, costs=costs)
+    cap = sum(est_capacity_rps(spec1, l, 1, c)
+              for l, c in zip(limits, costs))
+    reqs = poisson(1.2 * cap, 2000.0, spec1, seed=11)
+    blind = run_fleet(reqs, make_router("least_outstanding", n_pods=1),
+                      cfg, max_ms=120_000.0)
+    aware = run_fleet(reqs, make_router("gcr_aware", n_pods=1), cfg,
+                      max_ms=120_000.0)
+    assert aware.goodput_tok_s > blind.goodput_tok_s
+    # the blind router overfills the small replica relative to its limit
+    blind_small = blind.per_replica[1]["peak_parked"]
+    aware_small = aware.per_replica[1]["peak_parked"]
+    assert aware_small <= blind_small
