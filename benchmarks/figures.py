@@ -195,6 +195,50 @@ def fig_cluster_collapse() -> List[Row]:
     return rows
 
 
+def fig_cluster_affinity() -> List[Row]:
+    """Session-affinity sweep (the L2 locality figure): offered multi-turn
+    load from well under to well past fleet saturation, TTFT-p99 and
+    goodput for ``gcr_aware`` vs ``affinity`` routing over prefix-cached
+    replicas.  Under saturation the curves coincide (affinity's fallback
+    IS gcr_aware); past it, warm routing skips prefix prefill and the
+    curves separate - same shape as the GCR-NUMA vs GCR gap in Figure 6,
+    with 'same socket' replaced by 'replica holding the session's KV'."""
+    import dataclasses
+
+    from repro.cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
+                               knee_cost, run_fleet, sessions)
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=1)
+    limit, n_replicas = 32, 4
+    cost = dataclasses.replace(knee_cost(spec, limit, oversub=2.0),
+                               t_prefill_ms_per_tok=0.05)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    cfg = FleetConfig(n_replicas=n_replicas, admission="gcr",
+                      active_limit=limit, n_pods=1, cost=cost,
+                      prefix_cache_tokens=120_000)
+    mults = [0.5, 1.5, 3.0]
+    curves = {"gcr_aware": [], "affinity": []}
+    rows: List[Row] = []
+    for mult in mults:
+        reqs = sessions(mult * cap, 3_000.0, spec, seed=7, think_ms=1500.0)
+        for rname, ys in curves.items():
+            res = run_fleet(reqs, rname, cfg, max_ms=120_000.0,
+                            router_seed=1)
+            ys.append((res.goodput_tok_s, res.ttft_p99_ms))
+            rows.append((f"fig_affinity/{rname}/x{mult:g}_goodput_tok_s",
+                         res.goodput_tok_s, ""))
+            rows.append((f"fig_affinity/{rname}/x{mult:g}_ttft_p99_ms",
+                         res.ttft_p99_ms, ""))
+    base, aff = curves["gcr_aware"], curves["affinity"]
+    # under saturation: no separation to exploit, none paid
+    assert abs(aff[0][0] - base[0][0]) <= 0.05 * max(base[0][0], 1e-9), \
+        "affinity should be free under saturation"
+    # past saturation: warm routing must win both axes at the top point
+    assert aff[-1][0] > base[-1][0], "affinity should win goodput past knee"
+    assert aff[-1][1] < base[-1][1], "affinity should win TTFT-p99 past knee"
+    return rows
+
+
 def table_machines() -> List[Row]:
     """Cross-machine sanity (X6-2 / X5-4 / T7-2 models): GCR gain holds."""
     rows = []

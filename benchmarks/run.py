@@ -33,6 +33,7 @@ def main() -> None:
         ("leveldb", apps.leveldb_analog),
         ("threads", apps.real_threads_microbench),
         ("fig_cluster", figures.fig_cluster_collapse),
+        ("fig_affinity", figures.fig_cluster_affinity),
         ("serving", serving_bench.serving_collapse),
         ("cluster", cluster_bench.cluster_collapse),
         ("cluster_ctrl", cluster_bench.control_plane),

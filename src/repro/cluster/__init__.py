@@ -15,12 +15,17 @@ from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
                          SLOAutoscaler, make_autoscaler)
 from .fleet import (Fleet, FleetConfig, est_capacity_rps, knee_cost,
                     run_fleet)
-from .router import (ROUTERS, GCRAwareRouter, LeastOutstandingRouter,
-                     PowerOfTwoRouter, RoundRobinRouter, Router, make_router)
+from .invariants import (PlacementGuard, assert_conserved,
+                         assert_percentiles, conserved_count, guarded_case)
+from .router import (ROUTERS, AffinityRouter, GCRAwareRouter,
+                     LeastOutstandingRouter, PowerOfTwoRouter,
+                     PrefixAwareRouter, RoundRobinRouter, Router,
+                     make_router)
 from .signals import ReplicaReport, ReplicaView, SignalBus
 from .telemetry import SLO, ClusterResult, ClusterTelemetry, percentile
 from .workload import (WORKLOADS, WorkloadSpec, bursty, diurnal,
-                       make_workload, poisson, replay, uniform)
+                       make_workload, poisson, replay, sessions, to_trace,
+                       uniform)
 
 __all__ = [
     "Fleet",
@@ -39,7 +44,14 @@ __all__ = [
     "LeastOutstandingRouter",
     "PowerOfTwoRouter",
     "GCRAwareRouter",
+    "AffinityRouter",
+    "PrefixAwareRouter",
     "make_router",
+    "PlacementGuard",
+    "assert_conserved",
+    "assert_percentiles",
+    "conserved_count",
+    "guarded_case",
     "SignalBus",
     "ReplicaReport",
     "ReplicaView",
@@ -52,7 +64,9 @@ __all__ = [
     "poisson",
     "bursty",
     "diurnal",
+    "sessions",
     "replay",
+    "to_trace",
     "uniform",
     "make_workload",
 ]

@@ -38,13 +38,13 @@ import dataclasses
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
-from ..serving.engine import (Request, SimServeEngine, StepCostModel,
-                              make_admission)
+from ..serving.engine import (PrefixCache, Request, SimServeEngine,
+                              StepCostModel, make_admission)
 from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
                          SLOAutoscaler, make_autoscaler)
-from .router import Router
+from .router import Router, make_router
 from .signals import ReplicaView, SignalBus
 from .telemetry import ClusterResult, ClusterTelemetry, SLO
 from .workload import WorkloadSpec
@@ -99,6 +99,9 @@ class FleetConfig:
     cost: Optional[StepCostModel] = None
     active_limits: Optional[Sequence[int]] = None   # per-replica override
     costs: Optional[Sequence[Optional[StepCostModel]]] = None
+    # per-replica prefix-cache budget in tokens; 0 disables the cache
+    # (legacy behavior, bit-identical to pre-cache runs)
+    prefix_cache_tokens: int = 0
 
     def limit_for(self, idx: Optional[int] = None) -> int:
         if self.active_limits and idx is not None:
@@ -116,7 +119,9 @@ class FleetConfig:
         adm = make_admission(self.admission, self.limit_for(idx),
                              n_pods=self.n_pods,
                              promote_every=self.promote_every)
-        return SimServeEngine(adm, cost=self.cost_for(idx))
+        pc = (PrefixCache(self.prefix_cache_tokens)
+              if self.prefix_cache_tokens > 0 else None)
+        return SimServeEngine(adm, cost=self.cost_for(idx), prefix_cache=pc)
 
     def make_engines(self) -> List[SimServeEngine]:
         return [self.make_engine(i) for i in range(self.n_replicas)]
@@ -179,6 +184,7 @@ class Fleet:
 
     def _place(self, req: Request, t: float) -> None:
         i = self.router.route(req, self.live_views())
+        req.replica = i
         self.replicas[i].submit(req)
         self.telemetry.sample(i, self.replicas[i])
         if not self._stepping[i] and self.replicas[i].has_work:
@@ -215,6 +221,15 @@ class Fleet:
         done_t = self._step_end[idx] if self._stepping[idx] else t
         active_moved, parked_moved = self.replicas[idx].drain()
         kv = self.replicas[idx].cost.kv_bytes_per_tok
+        # the retiree's prefix cache dies with it: every warm token is
+        # prefill that will be recomputed by whoever serves the follow-up
+        # turns, and a not-yet-prefilled migrant's pinned hit evaporates
+        # (it re-probes the destination cache at re-submit, which is
+        # almost surely cold)
+        pc = self.replicas[idx].prefix_cache
+        lost = (pc.tokens if pc else 0) \
+            + sum(r.prefix_hit_tokens for r in active_moved + parked_moved
+                  if r.first_token_ms < 0)
         for r in active_moved:
             dt = self.migration.ms(r.prompt_len + r.generated, kv)
             self._push(done_t + dt, "migrate", r)
@@ -223,7 +238,8 @@ class Fleet:
             self._push(t + self.migration.ms(0, kv), "migrate", r)
         self._migrating += len(active_moved) + len(parked_moved)
         self.telemetry.on_retire(
-            idx, done_t, migrated=len(active_moved) + len(parked_moved))
+            idx, done_t, migrated=len(active_moved) + len(parked_moved),
+            prefix_tokens_lost=lost)
 
     # -- event loop ----------------------------------------------------------
     def run(self, requests: List[Request], max_ms: float = 120_000.0
@@ -234,6 +250,9 @@ class Fleet:
             raise RuntimeError("Fleet.run() is single-use; build a fresh "
                               "Fleet (or use run_fleet) per run")
         self._ran = True
+        # routers carry LB-side state (rotation counters, p2c RNG, sticky
+        # session maps); re-arm it so routing depends only on seeds
+        self.router.reset()
         self._heap = []
         self._seq = itertools.count()
         self._stepping = [False] * len(self.replicas)
@@ -310,7 +329,7 @@ class Fleet:
                                        migrating=self._migrating)
 
 
-def run_fleet(requests: List[Request], router: Router,
+def run_fleet(requests: List[Request], router: Union[Router, str],
               cfg: Optional[FleetConfig] = None,
               slo: Optional[SLO] = None,
               autoscale=False,
@@ -319,9 +338,14 @@ def run_fleet(requests: List[Request], router: Router,
               jitter_ms: float = 0.0,
               signal_seed: int = 0,
               max_replicas: int = 8,
-              rps_per_replica: Optional[float] = None) -> ClusterResult:
+              rps_per_replica: Optional[float] = None,
+              router_seed: Optional[int] = None) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
+    ``router`` is a built ``Router`` or a policy name; a name is resolved
+    through ``make_router`` seeded with ``router_seed`` (default: the
+    fleet's ``signal_seed``), so a by-name run is a pure function of its
+    seed arguments - there is no unseeded RNG path left for ``p2c``.
     ``autoscale``: False/None (fixed pool), True/'queue' (queue-depth
     scale-out hook), 'slo' (SLO-driven controller with scale-in),
     'predictive' (SLO controller + arrival-trend scaling; wants
@@ -332,6 +356,10 @@ def run_fleet(requests: List[Request], router: Router,
     """
     cfg = cfg or FleetConfig()
     slo = slo or SLO()
+    if isinstance(router, str):
+        router = make_router(
+            router, seed=(signal_seed if router_seed is None
+                          else router_seed), n_pods=cfg.n_pods)
     telem = ClusterTelemetry(slo)
     bus = SignalBus(slo=slo, period_ms=staleness_ms, jitter_ms=jitter_ms,
                     seed=signal_seed)

@@ -27,18 +27,33 @@ when the signal bus is omniscient).  The fleet passes views for live
   only then parks on the shortest limit-normalized passive queue, so a
   mixed pool (heterogeneous active limits) loads replicas in proportion
   to what they can actually absorb.  On homogeneous pools normalization
-  divides by a common constant and the placement order is unchanged.
+  divides by a common constant and the placement order is unchanged;
+* ``affinity``          - sticky-with-spillover session affinity: follow
+  the session's warm replica (its prefix KV lives there) unless that
+  replica is out of headroom *and* materially more backed up than the
+  best alternative, then fall back to ``gcr_aware`` and re-home the
+  session.  GCR-NUMA's warm-socket preference, one layer up;
+* ``prefix_aware``      - scores candidates by estimated warm prefix
+  tokens x normalized headroom from LB-side placement history - the
+  generalization of ``affinity`` to prefix groups shared by many
+  sessions; falls back to ``gcr_aware`` when nothing scores.
+
+The sticky/prefix maps live in the router, i.e. the load balancer: the LB
+remembers where it sent a session first-hand (always fresh, like the
+arrival counter), while per-replica cache *occupancy* crosses the stale
+signal bus like every other replica-side gauge.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .signals import ReplicaView
 
-ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware")
+ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware",
+           "affinity", "prefix_aware")
 
 
 class Router:
@@ -55,6 +70,13 @@ class Router:
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         raise NotImplementedError
 
+    def reset(self) -> None:
+        """Drop per-run state (rotation counters, RNG position, sticky
+        maps).  ``Fleet.run`` calls this on entry, so one router instance
+        drives any number of runs bit-identically - routing randomness is
+        pinned by the construction seed, never by how often the instance
+        was used before."""
+
 
 class RoundRobinRouter(Router):
     """Occupancy-blind rotation - the collapse baseline."""
@@ -62,6 +84,9 @@ class RoundRobinRouter(Router):
     name = "round_robin"
 
     def __init__(self) -> None:
+        self._i = 0
+
+    def reset(self) -> None:
         self._i = 0
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
@@ -85,7 +110,11 @@ class PowerOfTwoRouter(Router):
     name = "p2c"
 
     def __init__(self, seed: int = 0) -> None:
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
+
+    def reset(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         n = len(views)
@@ -133,7 +162,140 @@ class GCRAwareRouter(Router):
                                          v.idx)).idx
 
 
+def _worth_following(home: ReplicaView, views: Sequence[ReplicaView],
+                     min_headroom_frac: float, spill_slack: float) -> bool:
+    """Shared spillover test: keep routing to a warm replica unless it is
+    out of headroom AND its normalized passive queue exceeds the pool's
+    best by more than ``spill_slack`` - at saturation every queue grows,
+    and trading warm state for an equally long cold queue is pure loss."""
+    h = home.headroom
+    if h is None:
+        return True          # unlimited replica: no congestion signal
+    if h > min_headroom_frac * home.active_limit:
+        return True          # room at home
+    norm = [v.num_parked / v.active_limit for v in views if v.active_limit]
+    best = min(norm) if norm else 0.0
+    return (home.num_parked / home.active_limit) - best <= spill_slack
+
+
+class AffinityRouter(GCRAwareRouter):
+    """Sticky session routing with headroom-gated spillover.
+
+    A session's follow-up turn goes back to the replica that served it
+    last (its prefix KV is warm there), UNLESS the home's normalized
+    headroom is below ``min_headroom_frac`` *and* its normalized passive
+    queue exceeds the pool's best by more than ``spill_slack`` - at
+    saturation every queue grows, and abandoning warm state to stand in
+    an equally long cold queue is pure waste, so mere fullness is not a
+    reason to spill.  On spillover (or for session-free requests) this is
+    exactly ``gcr_aware``, and the session is re-homed to wherever the
+    fallback placed it (its state will be warm *there* next turn).
+    Replicas the autoscaler retired leave the view list, so a stale home
+    entry falls through to the fallback instead of routing to a corpse.
+    """
+
+    name = "affinity"
+
+    def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
+                 spill_slack: float = 0.25) -> None:
+        super().__init__(n_pods)
+        self.min_headroom_frac = min_headroom_frac
+        self.spill_slack = spill_slack
+        self._home: Dict[int, int] = {}     # session_id -> replica idx
+
+    def reset(self) -> None:
+        self._home.clear()
+
+    def _follow(self, home: ReplicaView,
+                views: Sequence[ReplicaView]) -> bool:
+        return _worth_following(home, views, self.min_headroom_frac,
+                                self.spill_slack)
+
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        sid = getattr(req, "session_id", -1)
+        if sid < 0:
+            return super().route(req, views)
+        home_idx = self._home.get(sid)
+        if home_idx is not None:
+            home = next((v for v in views if v.idx == home_idx), None)
+            if home is not None and self._follow(home, views):
+                return home_idx
+        i = super().route(req, views)
+        self._home[sid] = i
+        return i
+
+
+class PrefixAwareRouter(GCRAwareRouter):
+    """Score candidates by estimated warm prefix tokens x headroom.
+
+    The LB keeps per-prefix placement history (prefix_id -> replica ->
+    estimated cached tokens, refreshed on every placement); a candidate's
+    score is the prefill it would skip, weighted by a soft headroom/queue
+    factor - free slots attract, a long passive queue repels, but the
+    weight never hits zero just because the pool is saturated (at
+    saturation everyone's headroom is 0 and a hard x-headroom score would
+    degenerate to the fallback exactly when warm routing pays most).  A
+    warm winner still goes through the shared spillover test, so a
+    drowned replica's cache cannot keep attracting load.  Zero estimate
+    everywhere (first turn, evicted-everywhere prefix, session-free
+    request) falls back to ``gcr_aware`` - the no-session overhead is
+    exactly nothing.
+    """
+
+    name = "prefix_aware"
+
+    def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
+                 spill_slack: float = 0.25) -> None:
+        super().__init__(n_pods)
+        self.min_headroom_frac = min_headroom_frac
+        self.spill_slack = spill_slack
+        self._placed: Dict[int, Dict[int, int]] = {}
+
+    def reset(self) -> None:
+        self._placed.clear()
+
+    @staticmethod
+    def _weight(v: ReplicaView) -> float:
+        if v.active_limit is None:
+            return 1.0
+        free = (1.0 + max(0, v.headroom)) / (1.0 + v.active_limit)
+        backlog = 1.0 + v.num_parked / v.active_limit
+        return free / backlog
+
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        pid = getattr(req, "prefix_id", -1)
+        if pid < 0:
+            return super().route(req, views)
+        plen = getattr(req, "prefix_len", 0)
+        est = self._placed.get(pid)
+        choice: Optional[int] = None
+        if est and plen > 0:
+            by_idx = {v.idx: v for v in views}
+            best_score = 0.0
+            for idx in sorted(est):
+                v = by_idx.get(idx)
+                if v is None:
+                    continue        # that replica has been retired
+                score = min(est[idx], plen) * self._weight(v)
+                if score > best_score:
+                    best_score, choice = score, idx
+            if choice is not None and not _worth_following(
+                    by_idx[choice], views, self.min_headroom_frac,
+                    self.spill_slack):
+                choice = None
+        if choice is None:
+            choice = super().route(req, views)
+        # the turn's full history will be cached where it lands
+        group = self._placed.setdefault(pid, {})
+        group[choice] = max(group.get(choice, 0),
+                            req.prompt_len + req.gen_len)
+        return choice
+
+
 def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:
+    """Build a routing policy.  ``seed`` pins every stochastic policy
+    (today: ``p2c``); call sites must thread their run seed through so a
+    fleet run is a pure function of its seeds."""
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "least_outstanding":
@@ -142,4 +304,8 @@ def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:
         return PowerOfTwoRouter(seed)
     if name == "gcr_aware":
         return GCRAwareRouter(n_pods)
+    if name == "affinity":
+        return AffinityRouter(n_pods)
+    if name == "prefix_aware":
+        return PrefixAwareRouter(n_pods)
     raise ValueError(f"unknown router {name!r}")

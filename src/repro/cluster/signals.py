@@ -48,6 +48,10 @@ class ReplicaReport:
     tokens_out: int
     completed: int
     slo_met: int                  # completions that met the bus's SLO
+    # prefix-cache gauges/counters (0 on replicas without a cache)
+    cache_tokens: int = 0         # prefix KV tokens resident right now
+    cache_hit_tokens: int = 0     # cumulative prefix tokens served warm
+    cache_query_tokens: int = 0   # cumulative prefix tokens looked up
 
 
 class ReplicaView:
@@ -97,6 +101,27 @@ class ReplicaView:
         if limit is None:
             return None
         return limit - self.num_active
+
+    @property
+    def cache_tokens(self) -> int:
+        """Prefix-cache occupancy by the last signal (0 = no cache/cold)."""
+        if self._bus.live:
+            pc = self._bus.engines[self.idx].prefix_cache
+            return pc.tokens if pc else 0
+        return self._bus.reports[self.idx].cache_tokens
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Lifetime prefix-hit-token rate by the last signal (0.0 when the
+        replica has no cache or has never been asked)."""
+        if self._bus.live:
+            pc = self._bus.engines[self.idx].prefix_cache
+            hits = pc.hit_tokens if pc else 0
+            asks = pc.query_tokens if pc else 0
+        else:
+            rep = self._bus.reports[self.idx]
+            hits, asks = rep.cache_hit_tokens, rep.cache_query_tokens
+        return hits / asks if asks else 0.0
 
 
 class SignalBus:
@@ -159,7 +184,10 @@ class SignalBus:
             outstanding=occ["outstanding"],
             tokens_out=occ["tokens_out"],
             completed=occ["completed"],
-            slo_met=self._slo_met[idx])
+            slo_met=self._slo_met[idx],
+            cache_tokens=occ["cache_tokens"],
+            cache_hit_tokens=occ["cache_hit_tokens"],
+            cache_query_tokens=occ["cache_query_tokens"])
 
     def publish(self, idx: int, now_ms: float) -> None:
         """Capture replica ``idx``'s state; consumers see it from now on."""

@@ -10,7 +10,11 @@ tokens delivered by requests that met their SLO.  This module aggregates:
   observable the GCR-aware router steers on;
 * replica lifecycle (spawn/retire times) and the integrated
   **replica-ms** bill - the cost metric a scale-in policy must beat a
-  scale-out-only policy on.
+  scale-out-only policy on;
+* prefix-cache economics: fleet-wide hit rate over queried prefix
+  tokens, TTFT split **warm vs cold** (did the turn land where its
+  prefix was cached?), and warm tokens destroyed by scale-in - the
+  observables that separate an affinity router from ``gcr_aware``.
 """
 
 from __future__ import annotations
@@ -83,6 +87,7 @@ class ClusterTelemetry:
         self.spawn_ms: Dict[int, float] = {}
         self.retire_ms: Dict[int, float] = {}
         self.migrated = 0
+        self.prefix_tokens_lost = 0
 
     def sample(self, idx: int, eng: SimServeEngine) -> None:
         a = len(eng.active)
@@ -98,10 +103,12 @@ class ClusterTelemetry:
     def on_spawn(self, idx: int, now_ms: float) -> None:
         self.spawn_ms[idx] = now_ms
 
-    def on_retire(self, idx: int, now_ms: float, migrated: int = 0) -> None:
+    def on_retire(self, idx: int, now_ms: float, migrated: int = 0,
+                  prefix_tokens_lost: int = 0) -> None:
         self.retire_ms[idx] = now_ms
         self.scale_in_events.append(now_ms)
         self.migrated += migrated
+        self.prefix_tokens_lost += prefix_tokens_lost
 
     def finalize(self, now_ms: float, replicas: List[SimServeEngine],
                  offered: int, migrating: int = 0) -> ClusterResult:
@@ -118,6 +125,19 @@ class ClusterTelemetry:
         met = [r for r in completed if self.slo.met(r)]
         dur_s = max(now_ms, 1e-9) / 1e3
 
+        # warm/cold TTFT split over requests that *had* a shareable prefix:
+        # warm landed on a replica holding (some of) it, cold recomputed
+        warm = sorted(r.first_token_ms - r.arrive_ms for r in completed
+                      if r.first_token_ms >= 0 and r.prefix_len > 0
+                      and r.prefix_hit_tokens > 0)
+        cold = sorted(r.first_token_ms - r.arrive_ms for r in completed
+                      if r.first_token_ms >= 0 and r.prefix_len > 0
+                      and r.prefix_hit_tokens == 0)
+        cache_hits = sum(eng.prefix_cache.hit_tokens for eng in replicas
+                         if eng.prefix_cache is not None)
+        cache_asks = sum(eng.prefix_cache.query_tokens for eng in replicas
+                         if eng.prefix_cache is not None)
+
         per_replica = []
         replica_ms = 0.0
         for i, eng in enumerate(replicas):
@@ -127,6 +147,7 @@ class ClusterTelemetry:
             # last measured event, so clamp each lifetime term at >= 0
             life = max(0.0, (retire if retire >= 0.0 else now_ms) - spawn)
             replica_ms += life
+            pc = eng.prefix_cache
             per_replica.append({
                 "tokens": eng.tokens_out,
                 "completed": len(eng.completed),
@@ -139,6 +160,9 @@ class ClusterTelemetry:
                 "spawn_ms": spawn,
                 "retire_ms": retire,
                 "life_ms": life,
+                "cache_tokens": pc.tokens if pc else 0,
+                "cache_hit_rate": (pc.hit_tokens / pc.query_tokens
+                                   if pc and pc.query_tokens else 0.0),
             })
 
         return ClusterResult(
@@ -160,5 +184,14 @@ class ClusterTelemetry:
                    "scale_in_events": len(self.scale_in_events),
                    "migrated": self.migrated,
                    "migrating_end": migrating,
-                   "replica_ms": replica_ms},
+                   "replica_ms": replica_ms,
+                   "prefix_hit_rate": (cache_hits / cache_asks
+                                       if cache_asks else 0.0),
+                   "prefix_tokens_lost": float(self.prefix_tokens_lost),
+                   "warm_completed": float(len(warm)),
+                   "cold_completed": float(len(cold)),
+                   "ttft_warm_p50_ms": percentile(warm, 0.50),
+                   "ttft_warm_p99_ms": percentile(warm, 0.99),
+                   "ttft_cold_p50_ms": percentile(cold, 0.50),
+                   "ttft_cold_p99_ms": percentile(cold, 0.99)},
         )

@@ -14,11 +14,21 @@ doing):
   averaged-occupancy routing;
 * ``diurnal``  - sinusoidal ramp-up/ramp-down over the window (thinned
   Poisson), the daily traffic curve an autoscaler must track;
-* ``replay``   - seeded trace replay from explicit rows;
+* ``sessions`` - multi-turn conversations: session starts are Poisson,
+  each session runs several turns separated by exponential think time,
+  and every follow-up turn's prompt carries the full conversation
+  history as a KV-shareable prefix (``Request.session_id`` /
+  ``prefix_id`` / ``prefix_len``) - the workload where routing a turn
+  away from its warm replica costs real prefill;
+* ``replay``   - seeded trace replay from explicit rows (``to_trace``
+  round-trips any generated workload, sessions included);
 * ``uniform``  - the legacy serving-bench shape (uniform arrivals in a
   window), kept for the single-replica benches.
 
-All generators are exactly deterministic under a fixed seed.
+All generators are exactly deterministic under a fixed seed.  Sessions
+stay **open-loop**: every turn's arrival time is drawn up front, so a
+drowning fleet still receives the follow-up turns on schedule (a real
+user re-prompts whether or not the previous answer was fast).
 """
 
 from __future__ import annotations
@@ -30,7 +40,7 @@ import numpy as np
 
 from ..serving.engine import Request
 
-WORKLOADS = ("poisson", "bursty", "diurnal", "uniform")
+WORKLOADS = ("poisson", "bursty", "diurnal", "sessions", "uniform")
 
 
 @dataclass(frozen=True)
@@ -157,12 +167,77 @@ def diurnal(rps_peak: float, duration_ms: float,
     return _materialize(times, spec, rng, start_rid)
 
 
-def replay(trace: Iterable[Tuple[float, int, int, int]],
-           start_rid: int = 0) -> List[Request]:
-    """Replay explicit trace rows ``(arrive_ms, prompt_len, gen_len, pod)``."""
-    out = [Request(rid=start_rid + i, prompt_len=int(p), gen_len=int(g),
-                   pod=int(pod), arrive_ms=float(t))
-           for i, (t, p, g, pod) in enumerate(trace)]
+def sessions(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
+             seed: int = 0, turns_range: Tuple[int, int] = (2, 6),
+             think_ms: float = 1500.0,
+             followup_range: Tuple[int, int] = (16, 96),
+             start_rid: int = 0) -> List[Request]:
+    """Multi-turn conversation arrivals at a target *request* rate ``rps``.
+
+    Session starts are homogeneous Poisson at ``rps / mean(turns_range)``
+    so the time-averaged turn rate matches ``rps`` (sweeps stay comparable
+    with ``poisson`` at the same nominal load; turns cut off at the window
+    edge shave the realized rate slightly).  Each session draws a turn
+    count, a pod (conversations do not hop pods), and an opening prompt;
+    follow-up turns arrive an exponential think time after the previous
+    turn and their prompt is the full history so far (``prefix_len``
+    KV-shareable tokens) plus a fresh user message from
+    ``followup_range``.  ``prefix_id == session_id``: one conversation is
+    one prefix group.
+    """
+    if rps <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    mean_turns = 0.5 * (turns_range[0] + turns_range[1])
+    start_rate_per_ms = rps / mean_turns / 1e3
+    rows = []            # (arrive_ms, session, prompt, gen, prefix_len, pod)
+    t, sid = 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / start_rate_per_ms)
+        if t >= duration_ms:
+            break
+        n_turns = int(rng.integers(turns_range[0], turns_range[1] + 1))
+        pod = int(rng.integers(0, spec.n_pods))
+        at, history = t, 0
+        for _turn in range(n_turns):
+            if at >= duration_ms:
+                break
+            new_toks = (int(rng.integers(*spec.prompt_range)) if history == 0
+                        else int(rng.integers(*followup_range)))
+            gen = int(rng.integers(*spec.gen_range))
+            rows.append((at, sid, history + new_toks, gen, history, pod))
+            history += new_toks + gen
+            at += rng.exponential(think_ms)
+        sid += 1
+    rows.sort(key=lambda e: (e[0], e[1]))
+    return [Request(rid=start_rid + i, prompt_len=p, gen_len=g, pod=pod,
+                    arrive_ms=a, session_id=s, prefix_id=s, prefix_len=pfx)
+            for i, (a, s, p, g, pfx, pod) in enumerate(rows)]
+
+
+def to_trace(requests: Sequence[Request]) -> List[Tuple]:
+    """Serialize any workload to replayable rows (``replay`` round-trips
+    this, session identity included)."""
+    return [(r.arrive_ms, r.prompt_len, r.gen_len, r.pod,
+             r.session_id, r.prefix_id, r.prefix_len) for r in requests]
+
+
+def replay(trace: Iterable[Tuple], start_rid: int = 0) -> List[Request]:
+    """Replay explicit trace rows ``(arrive_ms, prompt_len, gen_len, pod)``
+    or the 7-column ``to_trace`` form with
+    ``(..., session_id, prefix_id, prefix_len)`` appended."""
+    out = []
+    for i, row in enumerate(trace):
+        if len(row) not in (4, 7):
+            # a 5/6-column row would silently lose its session identity
+            raise ValueError(f"trace row {i} has {len(row)} columns; "
+                             "expected 4 (legacy) or 7 (to_trace)")
+        t, p, g, pod = row[:4]
+        s, pfx_id, pfx_len = row[4:] if len(row) == 7 else (-1, -1, 0)
+        out.append(Request(rid=start_rid + i, prompt_len=int(p),
+                           gen_len=int(g), pod=int(pod), arrive_ms=float(t),
+                           session_id=int(s), prefix_id=int(pfx_id),
+                           prefix_len=int(pfx_len)))
     out.sort(key=lambda r: r.arrive_ms)
     return out
 
@@ -197,6 +272,8 @@ def make_workload(kind: str, rps: float, duration_ms: float,
         return bursty(rps, duration_ms, spec, seed)
     if kind == "diurnal":
         return diurnal(rps, duration_ms, spec, seed)
+    if kind == "sessions":
+        return sessions(rps, duration_ms, spec, seed)
     if kind == "uniform":
         return uniform(int(rps * duration_ms / 1e3), duration_ms, spec, seed)
     raise ValueError(f"unknown workload kind {kind!r}")

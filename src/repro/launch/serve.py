@@ -38,6 +38,15 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--router", default="gcr_aware", choices=ROUTERS)
     ap.add_argument("--workload", default="poisson", choices=WORKLOADS)
+    ap.add_argument("--sessions", action="store_true",
+                    help="shorthand for --workload sessions (multi-turn "
+                         "conversations with KV-shareable prefixes)")
+    ap.add_argument("--prefix-cache-tokens", type=int, default=0,
+                    help="per-replica prefix-cache budget in tokens "
+                         "(0 = no cache); hits discount prefill")
+    ap.add_argument("--prefill-ms-per-tok", type=float, default=0.05,
+                    help="prefill charge per uncached prompt token, "
+                         "applied only when a prefix cache is enabled")
     ap.add_argument("--rps", type=float, default=500.0)
     ap.add_argument("--duration-ms", type=float, default=5_000.0)
     ap.add_argument("--autoscale", nargs="?", const="queue", default=None,
@@ -56,23 +65,37 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.cluster:
-        from ..cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
-                               make_router, make_workload, run_fleet)
+        import dataclasses
 
+        from ..cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
+                               make_workload, run_fleet)
+        from ..serving.engine import StepCostModel
+
+        if args.sessions:
+            args.workload = "sessions"
         spec = WorkloadSpec()
+        cost = None
+        if args.prefix_cache_tokens > 0:
+            cost = dataclasses.replace(
+                StepCostModel(), t_prefill_ms_per_tok=args.prefill_ms_per_tok)
         cfg = FleetConfig(n_replicas=args.replicas,
                           admission=args.admission,
-                          active_limit=args.active_limit)
+                          active_limit=args.active_limit,
+                          cost=cost,
+                          prefix_cache_tokens=args.prefix_cache_tokens)
         reqs = make_workload(args.workload, args.rps, args.duration_ms,
                              spec, args.seed)
         rpr = est_capacity_rps(spec, args.active_limit, 1)
-        res = run_fleet(reqs, make_router(args.router, seed=args.seed),
+        # router resolved by name inside run_fleet, seeded by router_seed:
+        # the whole run is a pure function of --seed
+        res = run_fleet(reqs, args.router,
                         cfg, autoscale=args.autoscale,
                         max_replicas=args.max_replicas,
                         staleness_ms=args.staleness_ms,
                         jitter_ms=args.signal_jitter_ms,
                         signal_seed=args.seed,
-                        rps_per_replica=rpr)
+                        rps_per_replica=rpr,
+                        router_seed=args.seed)
         print(f"router={args.router} admission={args.admission} "
               f"workload={args.workload} rps={args.rps:g} "
               f"staleness={args.staleness_ms:g}ms "
@@ -82,14 +105,23 @@ def main() -> None:
               f"in={res.stats['scale_in_events']:.0f} "
               f"migrated={res.stats['migrated']:.0f} "
               f"replica_s={res.stats['replica_ms'] / 1e3:,.1f}")
+        if args.prefix_cache_tokens > 0:
+            print(f"prefix: hit_rate={res.stats['prefix_hit_rate']:.0%} "
+                  f"warm={res.stats['warm_completed']:.0f}@"
+                  f"p99={res.stats['ttft_warm_p99_ms']:,.0f}ms "
+                  f"cold={res.stats['cold_completed']:.0f}@"
+                  f"p99={res.stats['ttft_cold_p99_ms']:,.0f}ms "
+                  f"lost={res.stats['prefix_tokens_lost']:.0f}tok")
         hdr = (f"{'replica':>8} {'tokens':>10} {'done':>6} {'active':>7} "
-               f"{'parked':>7} {'peak_a':>7} {'peak_p':>7} {'life_s':>7}")
+               f"{'parked':>7} {'peak_a':>7} {'peak_p':>7} {'life_s':>7} "
+               f"{'cache':>8}")
         print(hdr)
         for i, r in enumerate(res.per_replica):
             print(f"{i:>8} {r['tokens']:>10,} {r['completed']:>6} "
                   f"{r['active_end']:>7} {r['parked_end']:>7} "
                   f"{r['peak_active']:>7} {r['peak_parked']:>7} "
-                  f"{r['life_ms'] / 1e3:>7.1f}")
+                  f"{r['life_ms'] / 1e3:>7.1f} "
+                  f"{r['cache_tokens']:>8,}")
         return
 
     if args.fleet_sweep:

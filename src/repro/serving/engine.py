@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import heapq
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -54,17 +55,28 @@ class Request:
     gen_len: int
     pod: int = 0
     arrive_ms: float = 0.0
+    # session/prefix identity (cluster workloads): follow-up turns of one
+    # conversation share a session_id; prefix_id names the KV-shareable
+    # prefix group (== session_id for conversations, but a shared system
+    # prompt could give many sessions one prefix_id); prefix_len is how
+    # many of this request's prompt tokens are covered by that prefix.
+    session_id: int = -1
+    prefix_id: int = -1
+    prefix_len: int = 0
     # runtime state
     generated: int = 0
     done_ms: float = -1.0
     first_token_ms: float = -1.0
+    prefix_hit_tokens: int = 0    # prompt tokens served from a prefix cache
+    replica: int = -1             # fleet replica that served this request
 
     def fresh(self) -> "Request":
         """Copy with runtime state reset, so one workload list can drive
         many engine/fleet runs without cross-contamination."""
         return Request(rid=self.rid, prompt_len=self.prompt_len,
                        gen_len=self.gen_len, pod=self.pod,
-                       arrive_ms=self.arrive_ms)
+                       arrive_ms=self.arrive_ms, session_id=self.session_id,
+                       prefix_id=self.prefix_id, prefix_len=self.prefix_len)
 
 
 @dataclass
@@ -78,16 +90,81 @@ class StepCostModel:
     hbm_budget: float = 0.6 * 16e9 * 8
     thrash_coef: float = 40.0        # ms per unit oversubscription
     t_xpod_ms: float = 6.0           # cross-pod mixing penalty (per step)
+    # Prefill compute per prompt token NOT covered by a prefix-cache hit,
+    # charged to the step a stream first decodes in.  0.0 by default so
+    # every pre-existing seeded result stays bit-identical; the cluster
+    # affinity benches opt in (prefill is what warm routing saves).
+    t_prefill_ms_per_tok: float = 0.0
 
     def step_ms(self, n_active: int, resident_tokens: int,
-                pod_mix: float) -> float:
+                pod_mix: float, prefill_tokens: int = 0) -> float:
         t = self.t_fixed_ms + self.t_tok_ms * n_active
         load = resident_tokens * self.kv_bytes_per_tok / self.hbm_budget
         if load > 1.0:
             # beyond-HBM: swapping KV pages in/out each step (superlinear)
             t += self.thrash_coef * (load - 1.0) ** 2 * max(1, n_active)
         t += self.t_xpod_ms * pod_mix
+        t += self.t_prefill_ms_per_tok * prefill_tokens
         return t
+
+
+class PrefixCache:
+    """Bounded LRU model of a replica's cached prefix KV blocks.
+
+    Entries are keyed by ``prefix_id`` and valued in *tokens* of prefix
+    KV resident on the replica.  A hit discounts the prefill charge of a
+    newly admitted stream (``StepCostModel.t_prefill_ms_per_tok``); the
+    decode-resident KV itself is unchanged - blocks must exist either
+    way, a hit only skips recomputing them.  This is the L2 analogue of
+    GCR-NUMA's warm-socket preference: the session whose prefix is
+    cached here is the waiter whose lock state is already warm on this
+    socket.  Completed requests insert their full history (prompt +
+    generated), which is exactly the next turn's shareable prefix;
+    eviction is LRU over prefix groups, so an un-followed conversation
+    ages out.
+    """
+
+    def __init__(self, capacity_tokens: int) -> None:
+        if capacity_tokens <= 0:
+            raise ValueError("capacity_tokens must be > 0")
+        self.capacity_tokens = capacity_tokens
+        self._entries: "OrderedDict[int, int]" = OrderedDict()
+        self.tokens = 0               # current occupancy
+        self.hit_tokens = 0           # cumulative tokens served from cache
+        self.query_tokens = 0         # cumulative prefix tokens looked up
+        self.evicted_tokens = 0       # cumulative tokens evicted
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, prefix_id: int, want_tokens: int) -> int:
+        """Tokens of ``prefix_id`` resident (capped at ``want_tokens``);
+        touches the entry's LRU position."""
+        if want_tokens <= 0:
+            return 0
+        self.query_tokens += want_tokens
+        cached = self._entries.get(prefix_id)
+        if cached is None:
+            return 0
+        self._entries.move_to_end(prefix_id)
+        hit = min(cached, want_tokens)
+        self.hit_tokens += hit
+        return hit
+
+    def insert(self, prefix_id: int, tokens: int) -> None:
+        """Grow ``prefix_id``'s entry to ``tokens`` (entries never shrink
+        short of eviction), evicting LRU entries to stay under capacity."""
+        if tokens <= 0:
+            return
+        old = self._entries.pop(prefix_id, 0)
+        self.tokens -= old
+        keep = max(old, min(tokens, self.capacity_tokens))
+        while self.tokens + keep > self.capacity_tokens and self._entries:
+            _, ev = self._entries.popitem(last=False)
+            self.tokens -= ev
+            self.evicted_tokens += ev
+        self._entries[prefix_id] = keep
+        self.tokens += keep
 
 
 @dataclass
@@ -121,10 +198,12 @@ class SimServeEngine:
     """
 
     def __init__(self, admission, cost: Optional[StepCostModel] = None,
-                 avg_prompt: int = 512):
+                 avg_prompt: int = 512,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.admission = admission
         self.cost = cost or StepCostModel()
         self.avg_prompt = avg_prompt
+        self.prefix_cache = prefix_cache
         self.requests: Dict[int, Request] = {}
         self.active: Dict[int, Request] = {}
         self.completed: List[Request] = []
@@ -135,6 +214,15 @@ class SimServeEngine:
         """Register an arriving request.  True => admitted to the batch now;
         False => parked in the admission's passive queue."""
         self.requests[r.rid] = r
+        if r.first_token_ms < 0:
+            # not yet prefilled anywhere (covers migrated parked streams,
+            # which re-probe the *new* replica's cache): pin whatever slice
+            # of the prefix is warm here; already-prefilled migrants keep
+            # their hit stats - their prefill was paid on the old replica
+            r.prefix_hit_tokens = (
+                self.prefix_cache.lookup(r.prefix_id, r.prefix_len)
+                if self.prefix_cache is not None and r.prefix_id >= 0
+                else 0)
         if self.admission.offer(r.rid, r.pod):
             self.active[r.rid] = r
             return True
@@ -153,6 +241,7 @@ class SimServeEngine:
         """Cheap occupancy/progress counters for the cluster metrics bus
         (``cluster.signals``).  This is what the replica *publishes*; a
         router reading a stale copy of it is the modeled reality."""
+        pc = self.prefix_cache
         return {
             "num_active": len(self.active),
             "num_parked": self.admission.num_parked,
@@ -160,6 +249,9 @@ class SimServeEngine:
             "outstanding": self.outstanding,
             "tokens_out": self.tokens_out,
             "completed": len(self.completed),
+            "cache_tokens": pc.tokens if pc else 0,
+            "cache_hit_tokens": pc.hit_tokens if pc else 0,
+            "cache_query_tokens": pc.query_tokens if pc else 0,
         }
 
     def drain(self) -> tuple:
@@ -176,6 +268,14 @@ class SimServeEngine:
             (active_moved if r.rid in self.active else parked_moved).append(r)
         for r in active_moved + parked_moved:
             del self.requests[r.rid]
+            if r.first_token_ms < 0 and self.prefix_cache is not None \
+                    and r.prefix_id >= 0 and r.prefix_len > 0:
+                # the stream never prefilled here, so its probe moves with
+                # it (it will re-probe the destination at re-submit) -
+                # refund this cache's stats or the fleet-wide hit rate
+                # would double-count the query's denominator
+                self.prefix_cache.query_tokens -= r.prefix_len
+                self.prefix_cache.hit_tokens -= r.prefix_hit_tokens
         self.active.clear()
         self.admission.drain()
         return active_moved, parked_moved
@@ -194,7 +294,20 @@ class SimServeEngine:
         resident = sum(r.prompt_len + r.generated for r in active.values())
         pod_mix = (adm.active_pod_mix()
                    if isinstance(adm, GCRPod) else self._mix(active))
-        dt = self.cost.step_ms(len(active), resident, pod_mix)
+        # streams entering their first step prefill now; prefix-cache hits
+        # (r.prefix_hit_tokens, pinned at submit) are blocks already warm
+        # on this replica and are not recomputed
+        prefill = 0
+        for r in active.values():
+            if r.first_token_ms < 0:
+                prefill += max(0, r.prompt_len - r.prefix_hit_tokens)
+                if self.prefix_cache is not None and r.prefix_id >= 0:
+                    # after prefill the prompt KV blocks exist on this
+                    # replica, so a follow-up turn arriving mid-decode can
+                    # already hit them (completion later extends the entry
+                    # over the generated tokens)
+                    self.prefix_cache.insert(r.prefix_id, r.prompt_len)
+        dt = self.cost.step_ms(len(active), resident, pod_mix, prefill)
         end = now + dt
         adm.tick()
 
@@ -225,6 +338,13 @@ class SimServeEngine:
             for rid2 in list(active.keys()):
                 if rid2 not in getattr(adm, "active", {rid2: None}):
                     active.pop(rid2)
+        if self.prefix_cache is not None:
+            for r in done:
+                if r.prefix_id >= 0:
+                    # the finished turn's full history is exactly the next
+                    # turn's shareable prefix
+                    self.prefix_cache.insert(r.prefix_id,
+                                             r.prompt_len + r.generated)
         self.completed.extend(done)
         return dt, done
 

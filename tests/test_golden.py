@@ -1,0 +1,141 @@
+"""Golden-seed routing regression: bit-exact per-request completion traces.
+
+One seeded multi-turn fleet scenario is run through every router policy;
+the full per-request trace (serving replica, first-token and completion
+stamps in float hex, prefix-cache hit tokens) is hashed and compared to
+the digests pinned in ``tests/golden/cluster_traces.json``.  Any refactor
+that silently changes routing, step math, cache behavior, or event order
+flips a digest, so behavior changes must be *deliberate* (regenerate with
+``PYTHONPATH=src python tests/test_golden.py``).
+
+The goldens are recorded against the default run_fleet path at
+``staleness_ms=0``; a second check builds the Fleet by hand on an explicit
+live ``SignalBus(period_ms=0)`` and must reproduce the same digest, which
+pins the bus property "staleness 0 is bit-exact with live engine reads".
+"""
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+from repro.cluster import (SLO, ClusterTelemetry, Fleet, FleetConfig,
+                           SignalBus, WorkloadSpec, est_capacity_rps,
+                           knee_cost, make_router, run_fleet, sessions)
+from repro.cluster.router import ROUTERS
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "cluster_traces.json"
+
+SEED = 7
+SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
+LIMIT = 32
+N_REPLICAS = 4
+
+
+def _cfg() -> FleetConfig:
+    cost = dataclasses.replace(knee_cost(SPEC, LIMIT, oversub=2.0),
+                               t_prefill_ms_per_tok=0.05)
+    return FleetConfig(n_replicas=N_REPLICAS, admission="gcr",
+                       active_limit=LIMIT, n_pods=2, cost=cost,
+                       prefix_cache_tokens=60_000)
+
+
+def _workload():
+    cap = est_capacity_rps(SPEC, LIMIT, N_REPLICAS, _cfg().cost)
+    return sessions(2.0 * cap, 1_500.0, SPEC, seed=SEED, think_ms=800.0)
+
+
+def _trace_rows(res, fleet_replicas):
+    rows = []
+    completed = sorted((r for eng in fleet_replicas for r in eng.completed),
+                       key=lambda r: r.rid)
+    for r in completed:
+        rows.append(f"{r.rid}:{r.replica}:{r.first_token_ms.hex()}:"
+                    f"{r.done_ms.hex()}:{r.prefix_hit_tokens}")
+    return rows
+
+
+def _run_policy(name):
+    reqs = _workload()
+    cfg = _cfg()
+    router = make_router(name, seed=1, n_pods=2)
+    telem = ClusterTelemetry(SLO())
+    fleet = Fleet(cfg.make_engines(), router, telem)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    rows = _trace_rows(res, fleet.replicas)
+    return {
+        "offered": res.offered,
+        "completed": res.completed,
+        "n_rows": len(rows),
+        "digest": hashlib.sha256("\n".join(rows).encode()).hexdigest(),
+        "head": rows[:3],
+    }
+
+
+def _load_golden():
+    if not GOLDEN_PATH.exists():
+        pytest.fail(f"golden file missing: {GOLDEN_PATH} "
+                    "(regenerate: PYTHONPATH=src python tests/test_golden.py)")
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize("policy", ROUTERS)
+def test_golden_trace_per_policy(policy):
+    golden = _load_golden()
+    assert policy in golden, \
+        f"no golden for {policy!r}; regenerate tests/golden"
+    got = _run_policy(policy)
+    want = golden[policy]
+    assert got["head"] == want["head"], \
+        (f"{policy}: first trace rows changed "
+         f"(got {got['head']}, want {want['head']})")
+    assert got == want, \
+        (f"{policy}: completion trace changed "
+         f"({got['n_rows']} rows, digest {got['digest'][:12]}... vs "
+         f"golden {want['n_rows']} rows, {want['digest'][:12]}...). "
+         "If the behavior change is intentional, regenerate with "
+         "PYTHONPATH=src python tests/test_golden.py")
+
+
+def test_staleness_zero_is_bit_exact_with_live_bus():
+    """An explicit SignalBus(period_ms=0) and the default run_fleet path
+    must produce the golden digest too - the live bus IS the omniscient
+    pre-bus routing, bit for bit."""
+    golden = _load_golden()["affinity"]
+    reqs = _workload()
+    cfg = _cfg()
+
+    via_run_fleet = run_fleet(reqs, make_router("affinity", seed=1,
+                                                n_pods=2),
+                              cfg, max_ms=60_000.0, staleness_ms=0.0)
+    explicit_bus = Fleet(_cfg().make_engines(),
+                         make_router("affinity", seed=1, n_pods=2),
+                         ClusterTelemetry(SLO()),
+                         bus=SignalBus(slo=SLO(), period_ms=0.0))
+    res2 = explicit_bus.run(reqs, max_ms=60_000.0)
+
+    rows2 = _trace_rows(res2, explicit_bus.replicas)
+    digest2 = hashlib.sha256("\n".join(rows2).encode()).hexdigest()
+    assert digest2 == golden["digest"]
+    assert res2.completed == golden["completed"]
+    assert res2.offered == golden["offered"]
+    # and the whole aggregate result agrees between the two constructions
+    assert dataclasses.asdict(via_run_fleet) == dataclasses.asdict(res2)
+
+
+def main() -> None:
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    golden = {policy: _run_policy(policy) for policy in ROUTERS}
+    GOLDEN_PATH.write_text(json.dumps(golden, indent=2, sort_keys=True)
+                           + "\n")
+    print(f"wrote {GOLDEN_PATH} ({len(golden)} policies)")
+    for policy, g in golden.items():
+        print(f"  {policy:18s} rows={g['n_rows']:4d} "
+              f"digest={g['digest'][:16]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,14 @@
 Covers the paper's lemmas at the data-structure level (FIFO queue order,
 single-signal), the GCR admission state machine (work conservation,
 active-set bound modulo transient promotion, no stream lost), simulator
-determinism, and the GCR-MoE admission (capacity bound, rotation fairness).
+determinism, the GCR-MoE admission (capacity bound, rotation fairness),
+and the L2 cluster layer: for random seeds, workloads, router policies,
+scale-event schedules, staleness, and truncation points - routers never
+place onto a retired replica, ``completed + live + migrating == offered``
+everywhere, telemetry percentiles are monotone in q, and fleet runs are
+pure functions of their seeds.  The L2 cases all flow through
+``repro.cluster.invariants.guarded_case``, the same driver
+``tests/test_cluster.py`` pins on a deterministic grid.
 """
 
 import numpy as np
@@ -144,6 +151,114 @@ def test_moe_capacity_and_rotation(seed, off):
                          priority_offset=jnp.int32(off + 7))
     assert abs(float(aux["moe_drop_frac"])
                - float(aux2["moe_drop_frac"])) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# L2 cluster fleet invariants (random seeds x workloads x routers x
+# scale-event schedules x staleness x truncation)
+# ---------------------------------------------------------------------------
+
+_schedules = st.lists(
+    st.tuples(st.sampled_from(["out", "in", "none"]), st.integers(0, 3)),
+    min_size=0, max_size=6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "bursty", "diurnal", "sessions"]),
+       router=st.sampled_from(
+           ["round_robin", "least_outstanding", "p2c", "gcr_aware",
+            "affinity", "prefix_aware"]),
+       schedule=_schedules,
+       cut=st.sampled_from([400.0, 900.0, 2_000.0, 60_000.0]),
+       staleness=st.sampled_from([0.0, 80.0]))
+def test_fleet_invariants_fuzzed(seed, kind, router, schedule, cut,
+                                 staleness):
+    """guarded_case asserts: placement liveness (PlacementGuard), request
+    conservation at the cutoff, and percentile monotonicity."""
+    from repro.cluster.invariants import guarded_case
+    guarded_case(seed, kind, router, tuple(schedule), max_ms=cut,
+                 staleness_ms=staleness)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1_000),
+       router=st.sampled_from(["p2c", "affinity", "gcr_aware"]),
+       staleness=st.sampled_from([0.0, 60.0]))
+def test_fleet_runs_are_pure_functions_of_seeds(seed, router, staleness):
+    import dataclasses
+
+    from repro.cluster import (FleetConfig, WorkloadSpec, knee_cost,
+                               run_fleet, sessions)
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    cfg = FleetConfig(n_replicas=3, admission="gcr", active_limit=32,
+                      n_pods=2, cost=knee_cost(spec, 32, oversub=2.0),
+                      prefix_cache_tokens=50_000)
+    reqs = sessions(300.0, 700.0, spec, seed=seed)
+
+    def go():
+        return run_fleet(reqs, router, cfg, max_ms=60_000.0,
+                         staleness_ms=staleness,
+                         jitter_ms=(10.0 if staleness else 0.0),
+                         signal_seed=seed)
+
+    assert dataclasses.asdict(go()) == dataclasses.asdict(go())
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "bursty", "diurnal", "sessions",
+                             "uniform"]),
+       rps=st.floats(50.0, 400.0))
+def test_workload_generators_fuzzed(seed, kind, rps):
+    """Same seed => identical stream; arrivals sorted and in-window; rids
+    unique; session prefix chains are exact conversation histories."""
+    from repro.cluster import WorkloadSpec, make_workload
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    a = make_workload(kind, rps, 800.0, spec, seed)
+    b = make_workload(kind, rps, 800.0, spec, seed)
+    assert a == b
+    assert all(0.0 <= r.arrive_ms < 800.0 for r in a)
+    assert [r.arrive_ms for r in a] == sorted(r.arrive_ms for r in a) \
+        or kind == "uniform"      # uniform keeps legacy draw order
+    assert len({r.rid for r in a}) == len(a)
+    if kind == "sessions":
+        by_sess = {}
+        for r in a:
+            assert r.prefix_id == r.session_id >= 0
+            by_sess.setdefault(r.session_id, []).append(r)
+        for turns in by_sess.values():
+            assert turns[0].prefix_len == 0
+            assert len({t.pod for t in turns}) == 1
+            for prev, cur in zip(turns, turns[1:]):
+                assert cur.prefix_len == prev.prompt_len + prev.gen_len
+    else:
+        assert all(r.session_id == -1 and r.prefix_len == 0 for r in a)
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=st.lists(st.floats(0.0, 1e6), max_size=60),
+       q1=st.floats(0.01, 1.0), q2=st.floats(0.01, 1.0))
+def test_percentile_monotone_in_q(vals, q1, q2):
+    from repro.cluster import percentile
+    lo, hi = min(q1, q2), max(q1, q2)
+    svals = sorted(vals)
+    assert percentile(svals, lo) <= percentile(svals, hi)
+    if svals:
+        assert percentile(svals, 1.0) == svals[-1]
+        assert min(svals) <= percentile(svals, lo) <= max(svals)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_session_trace_replay_roundtrip(seed, n):
+    from repro.cluster import WorkloadSpec, replay, sessions, to_trace
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    reqs = sessions(float(10 * n), 900.0, spec, seed=seed)
+    assert replay(to_trace(reqs)) == reqs
 
 
 # ---------------------------------------------------------------------------
