@@ -31,19 +31,28 @@ Claims asserted (deterministic under the fixed seed):
   of ``gcr_aware`` (it falls back to exactly that policy - the paper's
   uncontended-overhead discipline, held at L2).
 
-Usage:  PYTHONPATH=src python benchmarks/cluster_bench.py [--smoke]
+Grid points are independent (seed x config x policy) pure functions, so
+every sweep here is declared as ``scale_bench.GridPoint`` rows and
+sharded across a process pool (``scale_bench.run_grid``) - results are
+bit-identical to sequential execution, the wall-clock is divided by the
+worker count.
+
+Usage:  PYTHONPATH=src python benchmarks/cluster_bench.py [--smoke] [--jobs N]
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
-from repro.cluster import (FleetConfig, SLOAutoscaler, WorkloadSpec,
-                           assert_conserved, conserved_count,
-                           est_capacity_rps, knee_cost, make_router,
-                           make_workload, run_fleet, sessions)
+from repro.cluster import (WorkloadSpec, assert_conserved, conserved_count,
+                           est_capacity_rps, knee_cost, make_workload,
+                           sessions)
+
+try:                                    # python -m benchmarks.run / pytest
+    from benchmarks.scale_bench import GridPoint, run_grid
+except ImportError:                     # python benchmarks/cluster_bench.py
+    from scale_bench import GridPoint, run_grid
 
 Row = Tuple[str, float, str]
 
@@ -75,7 +84,8 @@ SMOKE_POLICIES = [
 _conserved = conserved_count
 
 
-def cluster_collapse(smoke: bool = False) -> List[Row]:
+def cluster_collapse(smoke: bool = False,
+                     jobs: Optional[int] = None) -> List[Row]:
     if smoke:
         n_replicas, limit, duration_ms, max_ms = 2, 32, 2_000.0, 30_000.0
         spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
@@ -89,19 +99,25 @@ def cluster_collapse(smoke: bool = False) -> List[Row]:
     cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
     cap = est_capacity_rps(spec, limit, n_replicas, cost)
     rows: List[Row] = [("cluster/est_capacity_rps", cap, "")]
-    results = {}
-    for mult in mults:
-        reqs = make_workload("poisson", cap * mult, duration_ms, spec, SEED)
-        for rname, adm in policies:
-            cfg = FleetConfig(n_replicas=n_replicas, admission=adm,
-                              active_limit=limit, n_pods=N_PODS, cost=cost)
-            res = run_fleet(reqs, make_router(rname, seed=1, n_pods=N_PODS),
-                            cfg, max_ms=max_ms)
-            results[(rname, adm, mult)] = res
-            tag = f"cluster/{rname}/{adm}/x{mult:g}"
-            rows.append((f"{tag}_tok_s", res.token_throughput, ""))
-            rows.append((f"{tag}_goodput_tok_s", res.goodput_tok_s, ""))
-            rows.append((f"{tag}_ttft_p99_ms", res.ttft_p99_ms, ""))
+
+    def point(rname, adm, mult):
+        return GridPoint(tag=f"{rname}/{adm}/x{mult:g}", workload="poisson",
+                         rps=cap * mult, duration_ms=duration_ms, seed=SEED,
+                         router=rname, admission=adm, n_replicas=n_replicas,
+                         active_limit=limit, n_pods=N_PODS,
+                         prompt_range=spec.prompt_range,
+                         gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                         max_ms=max_ms, router_seed=1)
+
+    grid = [(rname, adm, mult)
+            for mult in mults for rname, adm in policies]
+    out = run_grid([point(*g) for g in grid], jobs)
+    results = dict(zip(grid, out))
+    for (rname, adm, mult), res in results.items():
+        tag = f"cluster/{rname}/{adm}/x{mult:g}"
+        rows.append((f"{tag}_tok_s", res.token_throughput, ""))
+        rows.append((f"{tag}_goodput_tok_s", res.goodput_tok_s, ""))
+        rows.append((f"{tag}_ttft_p99_ms", res.ttft_p99_ms, ""))
 
     def series(rname, adm):
         return {m: results[(rname, adm, m)].token_throughput for m in mults}
@@ -130,14 +146,18 @@ def cluster_collapse(smoke: bool = False) -> List[Row]:
             f"{rname}/{adm}/x{mult}: {_conserved(res)}!={res.offered}"
 
     # bursty traffic + queue-depth autoscaler: the hook absorbs the burst
-    burst = make_workload("bursty", cap, duration_ms, spec, SEED)
-    base_cfg = FleetConfig(n_replicas=max(2, n_replicas // 2),
-                           admission="gcr", active_limit=limit,
-                           n_pods=N_PODS, cost=cost)
-    fixed = run_fleet(burst, make_router("gcr_aware", n_pods=N_PODS),
-                      base_cfg, max_ms=max_ms)
-    scaled = run_fleet(burst, make_router("gcr_aware", n_pods=N_PODS),
-                       base_cfg, autoscale=True, max_ms=max_ms)
+    def burst_point(tag, autoscale):
+        return GridPoint(tag=tag, workload="bursty", rps=cap,
+                         duration_ms=duration_ms, seed=SEED,
+                         router="gcr_aware", admission="gcr",
+                         n_replicas=max(2, n_replicas // 2),
+                         active_limit=limit, n_pods=N_PODS,
+                         prompt_range=spec.prompt_range,
+                         gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                         max_ms=max_ms, autoscale=autoscale)
+
+    fixed, scaled = run_grid([burst_point("fixed", False),
+                              burst_point("scaled", True)], jobs)
     rows.append(("cluster/autoscale/fixed_goodput", fixed.goodput_tok_s, ""))
     rows.append(("cluster/autoscale/scaled_goodput", scaled.goodput_tok_s,
                  ""))
@@ -146,7 +166,8 @@ def cluster_collapse(smoke: bool = False) -> List[Row]:
     return rows
 
 
-def staleness_resilience(smoke: bool = False) -> List[Row]:
+def staleness_resilience(smoke: bool = False,
+                         jobs: Optional[int] = None) -> List[Row]:
     """gcr_aware routing from stale published signals: goodput must degrade
     gracefully, retaining >= 80% of the omniscient-bus goodput at every
     staleness point >= 100 ms (2x saturation, bursty arrivals, 4 replicas
@@ -157,16 +178,21 @@ def staleness_resilience(smoke: bool = False) -> List[Row]:
                         n_pods=N_PODS)
     cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
     cap = est_capacity_rps(spec, limit, n_replicas, cost)
-    reqs = make_workload("bursty", 2.0 * cap, duration_ms, spec, SEED)
-    cfg = FleetConfig(n_replicas=n_replicas, admission="gcr",
-                      active_limit=limit, n_pods=N_PODS, cost=cost)
     stale_grid = [0.0, 120.0] if smoke else [0.0, 60.0, 120.0, 250.0]
+    out = run_grid([GridPoint(tag=f"stale{s:g}", workload="bursty",
+                              rps=2.0 * cap, duration_ms=duration_ms,
+                              seed=SEED, router="gcr_aware",
+                              n_replicas=n_replicas, active_limit=limit,
+                              n_pods=N_PODS, prompt_range=spec.prompt_range,
+                              gen_range=spec.gen_range,
+                              oversub=HBM_OVERSUB, max_ms=120_000.0,
+                              router_seed=0, staleness_ms=s,
+                              jitter_ms=(20.0 if s else 0.0),
+                              signal_seed=SEED)
+                    for s in stale_grid], jobs)
     rows: List[Row] = []
     goodput = {}
-    for s in stale_grid:
-        res = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
-                        max_ms=120_000.0, staleness_ms=s,
-                        jitter_ms=(20.0 if s else 0.0), signal_seed=SEED)
+    for s, res in zip(stale_grid, out):
         goodput[s] = res.goodput_tok_s
         rows.append((f"cluster/stale/{s:g}ms_goodput_tok_s",
                      res.goodput_tok_s, ""))
@@ -183,7 +209,8 @@ def staleness_resilience(smoke: bool = False) -> List[Row]:
     return rows
 
 
-def slo_scaling(smoke: bool = False) -> List[Row]:
+def slo_scaling(smoke: bool = False,
+                jobs: Optional[int] = None) -> List[Row]:
     """Diurnal ramp, 2 -> up-to-6 replicas: the predictive SLO controller
     must meet >= the queue-depth scaler's attainment while billing fewer
     replica-ms (its scale-in on the down-ramp pays for its earlier
@@ -196,19 +223,24 @@ def slo_scaling(smoke: bool = False) -> List[Row]:
     spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
                         n_pods=N_PODS)
     cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
-    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=limit,
-                      n_pods=N_PODS, cost=cost)
     cap0 = est_capacity_rps(spec, limit, 2, cost)
-    reqs = make_workload("diurnal", 2.5 * cap0, duration_ms, spec, SEED)
 
-    qd = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
-                   autoscale="queue", max_replicas=6, max_ms=120_000.0)
-    slo_scaler = SLOAutoscaler(cfg, max_replicas=6, predictive=True,
-                               rps_per_replica=cap0 / 2,
-                               cooldown_in_ms=800.0, scale_in_util=0.8,
-                               lead_ms=4000.0)
-    sc = run_fleet(reqs, make_router("gcr_aware", n_pods=N_PODS), cfg,
-                   autoscale=slo_scaler, max_ms=120_000.0)
+    def point(tag, **kw):
+        return GridPoint(tag=tag, workload="diurnal", rps=2.5 * cap0,
+                         duration_ms=duration_ms, seed=SEED,
+                         router="gcr_aware", n_replicas=2,
+                         active_limit=limit, n_pods=N_PODS,
+                         prompt_range=spec.prompt_range,
+                         gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                         max_ms=120_000.0, **kw)
+
+    qd, sc = run_grid(
+        [point("queue", autoscale="queue", max_replicas=6),
+         point("slo", slo_params=dict(max_replicas=6, predictive=True,
+                                      rps_per_replica=cap0 / 2,
+                                      cooldown_in_ms=800.0,
+                                      scale_in_util=0.8, lead_ms=4000.0))],
+        jobs)
 
     rows: List[Row] = []
     for name, res in [("queue_depth", qd), ("slo_predictive", sc)]:
@@ -232,29 +264,33 @@ def slo_scaling(smoke: bool = False) -> List[Row]:
     return rows
 
 
-def heterogeneous_pool(smoke: bool = False) -> List[Row]:
+def heterogeneous_pool(smoke: bool = False,
+                       jobs: Optional[int] = None) -> List[Row]:
     """Mixed active limits (big + small SKUs): capacity-aware gcr_aware
     must beat capacity-blind least_outstanding on goodput - equalizing
     outstanding streams across unequal replicas drowns the small ones."""
-    limits = [64, 16] if smoke else [96, 96, 32, 32]
+    limits = (64, 16) if smoke else (96, 96, 32, 32)
     duration_ms = 2_500.0 if smoke else 3_500.0
     # single pod so the comparison isolates capacity awareness
     spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
                         n_pods=1)
     costs = [knee_cost(spec, l, oversub=HBM_OVERSUB) for l in limits]
-    cfg = FleetConfig(n_replicas=len(limits), admission="gcr",
-                      active_limit=max(limits), n_pods=1,
-                      active_limits=limits, costs=costs)
     cap = sum(est_capacity_rps(spec, l, 1, c)
               for l, c in zip(limits, costs))
-    reqs = make_workload("poisson", 1.2 * cap, duration_ms, spec, SEED)
 
     rows: List[Row] = [("cluster/hetero/est_capacity_rps", cap, "")]
-    res = {}
-    for rname in ("least_outstanding", "gcr_aware"):
-        r = run_fleet(reqs, make_router(rname, seed=1, n_pods=1), cfg,
-                      max_ms=120_000.0)
-        res[rname] = r
+    routers = ("least_outstanding", "gcr_aware")
+    out = run_grid([GridPoint(tag=rname, workload="poisson", rps=1.2 * cap,
+                              duration_ms=duration_ms, seed=SEED,
+                              router=rname, n_replicas=len(limits),
+                              active_limit=max(limits), n_pods=1,
+                              prompt_range=spec.prompt_range,
+                              gen_range=spec.gen_range,
+                              oversub=HBM_OVERSUB, active_limits=limits,
+                              max_ms=120_000.0, router_seed=1)
+                    for rname in routers], jobs)
+    res = dict(zip(routers, out))
+    for rname, r in res.items():
         rows.append((f"cluster/hetero/{rname}_goodput_tok_s",
                      r.goodput_tok_s, ""))
         rows.append((f"cluster/hetero/{rname}_ttft_p99_ms",
@@ -268,7 +304,8 @@ def heterogeneous_pool(smoke: bool = False) -> List[Row]:
     return rows
 
 
-def session_affinity(smoke: bool = False) -> List[Row]:
+def session_affinity(smoke: bool = False,
+                     jobs: Optional[int] = None) -> List[Row]:
     """Session/prefix-affinity routing vs gcr_aware on the multi-turn
     workload, and the no-session overhead discipline.
 
@@ -289,8 +326,7 @@ def session_affinity(smoke: bool = False) -> List[Row]:
     duration_ms = 2_500.0 if smoke else 5_000.0
     spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
                         n_pods=1)
-    cost = dataclasses.replace(knee_cost(spec, limit, oversub=HBM_OVERSUB),
-                               t_prefill_ms_per_tok=0.05)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
     cap = est_capacity_rps(spec, limit, n_replicas, cost)
     # nominal above the target; window-edge turn truncation shaves the
     # realized rate (harder over the shorter smoke window), asserted
@@ -299,17 +335,26 @@ def session_affinity(smoke: bool = False) -> List[Row]:
     reqs = sessions(nominal * cap, duration_ms, spec, seed=SEED,
                     think_ms=1500.0)
     realized = len(reqs) / (duration_ms / 1e3) / cap
-    cfg = FleetConfig(n_replicas=n_replicas, admission="gcr",
-                      active_limit=limit, n_pods=1, cost=cost,
-                      prefix_cache_tokens=120_000)
     rows: List[Row] = [("cluster/affinity/est_capacity_rps", cap, ""),
                        ("cluster/affinity/load_mult", realized, "")]
     assert realized >= 1.5, \
         f"session workload only reaches {realized:.2f}x saturation"
-    res = {}
-    for rname in ("gcr_aware", "affinity", "prefix_aware"):
-        r = run_fleet(reqs, rname, cfg, max_ms=120_000.0, router_seed=1)
-        res[rname] = r
+
+    def point(tag, workload, rps, rname):
+        return GridPoint(tag=tag, workload=workload, rps=rps,
+                         duration_ms=duration_ms, seed=SEED, router=rname,
+                         n_replicas=n_replicas, active_limit=limit,
+                         n_pods=1, prompt_range=spec.prompt_range,
+                         gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                         prefill_ms_per_tok=0.05,
+                         prefix_cache_tokens=120_000, think_ms=1500.0,
+                         max_ms=120_000.0, router_seed=1)
+
+    routers = ("gcr_aware", "affinity", "prefix_aware")
+    out = run_grid([point(rname, "sessions", nominal * cap, rname)
+                    for rname in routers], jobs)
+    res = dict(zip(routers, out))
+    for rname, r in res.items():
         assert_conserved(r, f"affinity/{rname}")
         rows.append((f"cluster/affinity/{rname}_goodput_tok_s",
                      r.goodput_tok_s, ""))
@@ -336,9 +381,9 @@ def session_affinity(smoke: bool = False) -> List[Row]:
         "prefix_aware should not lose to gcr_aware on sessions"
 
     # uncontended-overhead discipline: no sessions => no affinity cost
-    pois = make_workload("poisson", 2.0 * cap, duration_ms, spec, SEED)
-    pb = run_fleet(pois, "gcr_aware", cfg, max_ms=120_000.0, router_seed=1)
-    pa = run_fleet(pois, "affinity", cfg, max_ms=120_000.0, router_seed=1)
+    pb, pa = run_grid([point(f"poisson/{rname}", "poisson", 2.0 * cap,
+                             rname)
+                       for rname in ("gcr_aware", "affinity")], jobs)
     for name, r in (("gcr_aware", pb), ("affinity", pa)):
         assert_conserved(r, f"affinity_poisson/{name}")
         rows.append((f"cluster/affinity/poisson_{name}_goodput_tok_s",
@@ -350,21 +395,26 @@ def session_affinity(smoke: bool = False) -> List[Row]:
     return rows
 
 
-def control_plane(smoke: bool = False) -> List[Row]:
+def control_plane(smoke: bool = False,
+                  jobs: Optional[int] = None) -> List[Row]:
     """Staleness + autoscaling + heterogeneity + affinity scenarios as one
     suite (all of it runs in --smoke too, so CI asserts every claim)."""
-    return (staleness_resilience(smoke) + slo_scaling(smoke)
-            + heterogeneous_pool(smoke) + session_affinity(smoke))
+    return (staleness_resilience(smoke, jobs) + slo_scaling(smoke, jobs)
+            + heterogeneous_pool(smoke, jobs)
+            + session_affinity(smoke, jobs))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grid for CI (seconds, not minutes)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="process-pool width for the sweep grids "
+                         "(default: CPU count)")
     args = ap.parse_args()
     print("name,value,derived")
-    for name, val, derived in (cluster_collapse(smoke=args.smoke)
-                               + control_plane(smoke=args.smoke)):
+    for name, val, derived in (cluster_collapse(args.smoke, args.jobs)
+                               + control_plane(args.smoke, args.jobs)):
         print(f"{name},{val:.6g},{derived}")
 
 

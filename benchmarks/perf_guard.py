@@ -1,0 +1,204 @@
+"""Perf regression guard for the virtual-time simulation core.
+
+The repo's quantitative claims all run on the L1/L2 simulators, so the
+simulators' own speed is a tracked artifact: this module times a fixed,
+seeded suite of simulation kernels, records wall-clock and
+**simulated-events/sec** into ``BENCH_cluster.json`` (committed at the
+repo root - the perf trajectory's baseline), and in ``--check`` mode
+fails if any suite regressed more than ``--factor`` (default 1.5x)
+against that baseline.
+
+Wall-clock is machine-dependent, so comparisons are *normalized*: a tiny
+fixed pure-Python loop is timed first (``calib_s``) and every suite's
+throughput is expressed in events per calibration unit.  A faster or
+slower CI runner moves the calibration and the suites together; only a
+genuine simulator slowdown moves their ratio.
+
+Event counts are deterministic per seed and recorded alongside: if a
+refactor changes them, the goldens (tests/test_golden.py) decide whether
+that was intentional - the guard only polices speed.
+
+Usage:
+    PYTHONPATH=src python benchmarks/perf_guard.py --write   # new baseline
+    PYTHONPATH=src python benchmarks/perf_guard.py --check   # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.cluster import WorkloadSpec, uniform
+from repro.serving.engine import SimServeEngine, make_admission
+
+try:
+    from benchmarks.scale_bench import GridPoint, run_point
+except ImportError:                     # script mode: python benchmarks/...
+    from scale_bench import GridPoint, run_point
+
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_cluster.json"
+DEFAULT_FACTOR = float(os.environ.get("PERF_GUARD_FACTOR", "1.5"))
+
+
+REPS = 3          # best-of-N: the max normalized throughput filters steal
+
+
+def _calibrate(iters: int = 1_000_000) -> float:
+    """Machine-speed unit: a fixed arithmetic loop, timed once.  Measured
+    immediately before each suite rep so calibration and suite see the
+    same instantaneous machine conditions (CPU steal on shared hosts
+    varies on a seconds timescale); the suite's throughput normalized by
+    it transfers across machines of different speeds."""
+    t0 = time.perf_counter()
+    acc = 0
+    for i in range(iters):
+        acc += i * i & 1023
+    _ = acc
+    return time.perf_counter() - t0
+
+
+# -- suites (fixed seeds; events counts are deterministic) -------------------
+
+def _engine_run() -> Tuple[float, int]:
+    """Single-replica steppable engine under GCR oversubscription."""
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    reqs = uniform(12_000, window_ms=20_000.0, spec=spec, seed=5)
+    eng = SimServeEngine(make_admission("gcr", 96))
+    t0 = time.perf_counter()
+    eng.run(reqs, max_ms=3_000_000.0)
+    return time.perf_counter() - t0, eng.tokens_out
+
+
+def _fleet_point(pt: GridPoint) -> Tuple[float, int]:
+    t0 = time.perf_counter()
+    res = run_point(pt)
+    return time.perf_counter() - t0, int(res.stats["sim_events"])
+
+
+def _fleet_gcr_x2() -> Tuple[float, int]:
+    return _fleet_point(GridPoint(
+        tag="guard", workload="poisson", rps=900.0, duration_ms=20_000.0,
+        seed=7, router="gcr_aware", n_replicas=4, active_limit=32,
+        n_pods=2, prompt_range=(128, 512), gen_range=(32, 128),
+        max_ms=300_000.0, router_seed=1))
+
+
+def _fleet_sessions_affinity() -> Tuple[float, int]:
+    return _fleet_point(GridPoint(
+        tag="guard", workload="sessions", rps=900.0, duration_ms=15_000.0,
+        seed=7, router="affinity", n_replicas=4, active_limit=32,
+        n_pods=1, prompt_range=(128, 512), gen_range=(32, 128),
+        prefill_ms_per_tok=0.05, prefix_cache_tokens=120_000,
+        max_ms=300_000.0, router_seed=1))
+
+
+def _fleet_scale64() -> Tuple[float, int]:
+    return _fleet_point(GridPoint(
+        tag="guard", workload="poisson", rps=8_000.0, duration_ms=3_000.0,
+        seed=11, router="gcr_aware", n_replicas=64, active_limit=16,
+        n_pods=2, prompt_range=(128, 512), gen_range=(32, 128),
+        max_ms=300_000.0, router_seed=1))
+
+
+SUITES: List[Tuple[str, Callable[[], Tuple[float, int]]]] = [
+    ("engine_run", _engine_run),
+    ("fleet_gcr_x2", _fleet_gcr_x2),
+    ("fleet_sessions_affinity", _fleet_sessions_affinity),
+    ("fleet_scale64", _fleet_scale64),
+]
+
+
+def measure() -> Dict:
+    suites: Dict[str, Dict[str, float]] = {}
+    last_calib = 0.0
+    for name, fn in SUITES:
+        best_norm, best_wall, events = 0.0, float("inf"), 0
+        for _rep in range(REPS):
+            # calibrate right next to the rep: numerator and denominator
+            # see the same machine weather, so their ratio is stable even
+            # when absolute speed is not
+            calib_s = _calibrate()
+            last_calib = calib_s
+            wall_s, events = fn()
+            norm = events / max(wall_s, 1e-9) * calib_s
+            if norm > best_norm:
+                best_norm = norm
+            best_wall = min(best_wall, wall_s)
+        suites[name] = {
+            "wall_s": round(best_wall, 4),
+            "events": events,
+            "events_per_s": round(events / max(best_wall, 1e-9), 1),
+            # machine-independent throughput: events per calibration unit
+            "norm_events_per_calib": round(best_norm, 1),
+        }
+    return {"calib_s": round(last_calib, 4), "suites": suites}
+
+
+def check(factor: float) -> int:
+    if not BASELINE_PATH.exists():
+        print(f"perf_guard: no baseline at {BASELINE_PATH}; run --write")
+        return 1
+    base = json.loads(BASELINE_PATH.read_text())
+    got = measure()
+    failures = []
+    for name, b in base["suites"].items():
+        g = got["suites"].get(name)
+        if g is None:
+            failures.append(f"{name}: suite missing from this build")
+            continue
+        ratio = b["norm_events_per_calib"] / max(g["norm_events_per_calib"],
+                                                 1e-9)
+        status = "ok" if ratio <= factor else "REGRESSED"
+        print(f"perf_guard/{name}: {g['events_per_s']:,.0f} ev/s "
+              f"(baseline-normalized slowdown {ratio:.2f}x, "
+              f"limit {factor:g}x) {status}")
+        if b["events"] != g["events"]:
+            print(f"perf_guard/{name}: NOTE event count changed "
+                  f"{b['events']} -> {g['events']} (behavior drift is the "
+                  "goldens' jurisdiction; re-run --write after intentional "
+                  "changes)")
+        if ratio > factor:
+            failures.append(f"{name}: {ratio:.2f}x slower than baseline")
+    unpoliced = set(got["suites"]) - set(base["suites"])
+    for name in sorted(unpoliced):
+        failures.append(f"{name}: measured but absent from the baseline "
+                        "(re-run --write to start policing it)")
+    if failures:
+        print("perf_guard: FAIL\n  " + "\n  ".join(failures))
+        return 1
+    print("perf_guard: all suites within budget")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help=f"write a fresh baseline to {BASELINE_PATH}")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline "
+                         "(the default action; flag kept for explicit CI "
+                         "invocations)")
+    ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR,
+                    help="max allowed normalized slowdown (default 1.5, "
+                         "env PERF_GUARD_FACTOR)")
+    args = ap.parse_args()
+    if args.write:
+        data = measure()
+        BASELINE_PATH.write_text(json.dumps(data, indent=2, sort_keys=True)
+                                 + "\n")
+        print(f"wrote {BASELINE_PATH}")
+        for name, s in data["suites"].items():
+            print(f"  {name:26s} {s['events_per_s']:>12,.0f} ev/s "
+                  f"wall {s['wall_s']:.2f}s")
+        return
+    raise SystemExit(check(args.factor))
+
+
+if __name__ == "__main__":
+    main()

@@ -3,24 +3,32 @@
 Prints ``name,value,derived`` CSV rows.  Figures 1/6/7/8/9/11 and the Kyoto
 / LevelDB application analogues run on the deterministic contention
 simulator; the serving bench exercises the L1 GCR admission engine; the
-roofline rows read the dry-run artifacts (run
-``python -m repro.launch.dryrun --all`` first to regenerate those).
+cluster/scale suites sweep the L2 fleet (their grids shard across a
+process pool internally); the roofline rows read the dry-run artifacts
+(run ``python -m repro.launch.dryrun --all`` first to regenerate those).
 
-Usage:  PYTHONPATH=src python -m benchmarks.run
+``--jobs N`` additionally shards whole *suites* across a process pool
+(results still print in suite order; a suite that itself pools detects
+the daemonic context and runs its grid in-process).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--jobs N]
 """
 
 from __future__ import annotations
 
+import argparse
+import multiprocessing
 import sys
 import time
 
 
-def main() -> None:
-    sys.path.insert(0, "src")
+def _suites():
+    if "src" not in sys.path:
+        sys.path.insert(0, "src")
     from benchmarks import (ablation, apps, cluster_bench, figures, roofline,
-                            serving_bench)
+                            scale_bench, serving_bench)
 
-    suites = [
+    return [
         ("ablation", ablation.knob_sensitivity),
         ("fig1", figures.fig1_collapse),
         ("fig6", figures.fig6_throughput),
@@ -37,28 +45,48 @@ def main() -> None:
         ("serving", serving_bench.serving_collapse),
         ("cluster", cluster_bench.cluster_collapse),
         ("cluster_ctrl", cluster_bench.control_plane),
+        ("scale", scale_bench.scale_sweep),
         ("roofline", roofline.roofline_rows),
         ("dryrun", roofline.summary),
     ]
 
+
+def _run_suite(name: str):
+    """Run one suite by name (module-level so a process pool can call it).
+    Returns (name, rows or None, wall_s, status)."""
+    fn = dict(_suites())[name]
+    t0 = time.time()
+    try:
+        return name, fn(), time.time() - t0, "ok"
+    except AssertionError as e:
+        return name, None, time.time() - t0, f"CLAIM_FAILED:{e}"
+    except Exception as e:  # noqa: BLE001
+        return name, None, time.time() - t0, f"ERROR:{e!r}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="run suites in an N-wide process pool "
+                         "(default 1: sequential)")
+    args = ap.parse_args()
+    names = [name for name, _ in _suites()]
+
     print("name,value,derived")
     failures = []
-    for name, fn in suites:
-        t0 = time.time()
-        try:
-            rows = fn()
+    if args.jobs > 1:
+        with multiprocessing.Pool(min(args.jobs, len(names))) as pool:
+            results = pool.imap(_run_suite, names)
+            outcomes = list(results)
+    else:
+        outcomes = (_run_suite(n) for n in names)
+    for name, rows, wall, status in outcomes:
+        if rows is not None:
             for rname, val, derived in rows:
                 print(f"{rname},{val:.6g},{derived}")
-            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},ok",
-                  flush=True)
-        except AssertionError as e:
-            failures.append((name, str(e)))
-            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},"
-                  f"CLAIM_FAILED:{e}", flush=True)
-        except Exception as e:  # noqa: BLE001
-            failures.append((name, repr(e)))
-            print(f"suite/{name}/wall_s,{time.time() - t0:.1f},"
-                  f"ERROR:{e!r}", flush=True)
+        else:
+            failures.append((name, status))
+        print(f"suite/{name}/wall_s,{wall:.1f},{status}", flush=True)
     if failures:
         print(f"# {len(failures)} suite failures: {failures}",
               file=sys.stderr)

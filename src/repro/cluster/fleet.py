@@ -1,8 +1,13 @@
 """Shared-clock virtual-time fleet of serving replicas (DESIGN.md 7).
 
-One event loop, N ``SimServeEngine`` replicas.  Five event kinds on a
-single heap keyed by virtual milliseconds (ties broken by insertion order,
-so runs are exactly deterministic under a fixed seed):
+One event loop, N ``SimServeEngine`` replicas.  Five event kinds on an
+**event calendar**: the arrival track is known up front, so arrivals are
+a pre-sorted list consumed by index (no per-arrival heap traffic), while
+a small near-future heap keyed by virtual milliseconds sequences the
+rest.  The tie-break contract reproduces the legacy single-heap order
+exactly - at equal time an arrival precedes every heap event (arrivals
+were pushed first), heap ties break by push sequence - so runs are
+deterministic under a fixed seed, bit for bit:
 
 * ``arrive``  - the open-loop workload injects a request; the router picks
   a replica *from the signal bus's last published occupancy views*; if
@@ -148,11 +153,13 @@ class Fleet:
         self.retired = [False] * len(replicas)
         # event-loop state (created in run())
         self._heap: list = []
+        self._arrivals: List[Request] = []
         self._seq = itertools.count()
         self._stepping: List[bool] = []
         self._step_end: List[float] = []
         self._work = 0          # pending arrive/step/migrate events
         self._migrating = 0     # streams in KV transit between replicas
+        self._events = 0        # total events processed (perf telemetry)
         self._live_views: List[ReplicaView] = []
         self._ran = False
 
@@ -174,21 +181,6 @@ class Fleet:
         if kind in ("arrive", "step", "migrate"):
             self._work += 1
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
-
-    def _start_step(self, i: int, t: float) -> None:
-        dt, _done = self.replicas[i].step(t)
-        if dt > 0.0:
-            self._stepping[i] = True
-            self._step_end[i] = t + dt
-            self._push(t + dt, "step", i)
-
-    def _place(self, req: Request, t: float) -> None:
-        i = self.router.route(req, self.live_views())
-        req.replica = i
-        self.replicas[i].submit(req)
-        self.telemetry.sample(i, self.replicas[i])
-        if not self._stepping[i] and self.replicas[i].has_work:
-            self._start_step(i, t)
 
     # -- scaling -------------------------------------------------------------
     def _scale_out(self, eng: SimServeEngine, t: float) -> None:
@@ -257,13 +249,21 @@ class Fleet:
         self._seq = itertools.count()
         self._stepping = [False] * len(self.replicas)
         self._step_end = [0.0] * len(self.replicas)
-        self._work = 0
         self._migrating = 0
+        self._events = 0
 
-        # clone on entry: engines mutate Request state in place, and one
-        # workload list is typically swept across many policy runs
-        for r in sorted(requests, key=lambda r: (r.arrive_ms, r.rid)):
-            self._push(r.arrive_ms, "arrive", r.fresh())
+        # Event calendar: the arrival track is known up front, so arrivals
+        # are a pre-sorted list consumed by index - O(1) per arrival, no
+        # heap traffic - while the (small) near-future heap sequences only
+        # step/migrate/publish/scale events.  Tie-break contract: at equal
+        # virtual time an arrival precedes every heap event, which is
+        # exactly the legacy single-heap order (arrivals were pushed first
+        # and ties broke by insertion sequence).
+        # Clone on entry: engines mutate Request state in place, and one
+        # workload list is typically swept across many policy runs.
+        self._arrivals = [r.fresh() for r in
+                          sorted(requests, key=lambda r: (r.arrive_ms, r.rid))]
+        self._work = len(self._arrivals)
         if self.autoscaler is not None:
             self._push(self.autoscale_every_ms, "scale", None)
         for i, eng in enumerate(self.replicas):
@@ -276,27 +276,73 @@ class Fleet:
 
         now = 0.0
         injected = 0
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
+        events = 0
+        # the event loop is the measured substrate's innermost loop: bind
+        # the per-event state to locals and inline place/step dispatch
+        # (these lists are mutated in place by scaling, never rebound, so
+        # local bindings stay correct)
+        heap = self._heap
+        arrivals = self._arrivals
+        replicas = self.replicas
+        stepping = self._stepping
+        step_end = self._step_end
+        retired = self.retired
+        route = self.router.route
+        bus = self.bus
+        heappush, heappop = heapq.heappush, heapq.heappop
+        seq = self._seq
+        ai, n_arr = 0, len(arrivals)
+        while True:
+            if ai < n_arr:
+                ta = arrivals[ai].arrive_ms
+                if heap and heap[0][0] < ta:
+                    t, _, kind, payload = heappop(heap)
+                else:               # arrivals win ties (legacy seq order)
+                    t, kind, payload = ta, "arrive", arrivals[ai]
+                    ai += 1
+            elif heap:
+                t, _, kind, payload = heappop(heap)
+            else:
+                break
             if t > max_ms:
                 break
-            if kind in ("arrive", "step", "migrate"):
+            events += 1
+            # work events advance the measured clock; bookkeeping ticks
+            # (publish/scale) must not extend the measured duration
+            if kind == "step":
                 self._work -= 1
-                # bookkeeping ticks must not extend the measured duration
                 now = t
-            if kind == "arrive":
-                injected += 1
-                self.bus.arrivals += 1
-                self._place(payload, t)
-            elif kind == "step":
                 i = payload
-                self._stepping[i] = False
-                self.telemetry.sample(i, self.replicas[i])
-                if not self.retired[i] and self.replicas[i].has_work:
-                    self._start_step(i, t)
-            elif kind == "migrate":
-                self._migrating -= 1
-                self._place(payload, t)
+                stepping[i] = False
+                eng = replicas[i]
+                if eng.active and not retired[i]:
+                    dt, _done = eng.step(t)
+                    if dt > 0.0:
+                        end_t = t + dt
+                        stepping[i] = True
+                        step_end[i] = end_t
+                        self._work += 1
+                        heappush(heap, (end_t, next(seq), "step", i))
+            elif kind == "arrive" or kind == "migrate":
+                self._work -= 1
+                now = t
+                if kind == "arrive":
+                    injected += 1
+                    bus.arrivals += 1
+                else:
+                    self._migrating -= 1
+                i = route(payload, self._live_views)
+                payload.replica = i
+                eng = replicas[i]
+                eng.submit(payload)
+                if not stepping[i] and eng.active:
+                    dt, _done = eng.step(t)
+                    if dt > 0.0:
+                        end_t = t + dt
+                        stepping[i] = True
+                        step_end[i] = end_t
+                        self._work += 1
+                        heappush(heap, (end_t, next(seq), "step", i))
             elif kind == "publish":
                 i = payload
                 if not self.retired[i]:
@@ -325,8 +371,10 @@ class Fleet:
         # single-engine loop has the same now += dt overshoot past max_ms).
         end = max([now] + [e for i, e in enumerate(self._step_end)
                            if self._stepping[i]])
+        self._events = events
         return self.telemetry.finalize(end, self.replicas, injected,
-                                       migrating=self._migrating)
+                                       migrating=self._migrating,
+                                       events=events)
 
 
 def run_fleet(requests: List[Request], router: Union[Router, str],

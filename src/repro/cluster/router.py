@@ -101,7 +101,15 @@ class LeastOutstandingRouter(Router):
     name = "least_outstanding"
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
-        return min(views, key=lambda v: (v.outstanding, v.idx)).idx
+        # manual scan in ascending idx order; strict < keeps the lowest
+        # index on ties, identical to min(key=(outstanding, idx))
+        best = views[0]
+        best_out = best.outstanding
+        for v in views[1:]:
+            out = v.outstanding
+            if out < best_out:
+                best, best_out = v, out
+        return best.idx
 
 
 class PowerOfTwoRouter(Router):
@@ -134,32 +142,77 @@ class GCRAwareRouter(Router):
     Falls back gracefully on replicas without admission limits
     (``NoAdmission``): there is no headroom signal, so within the pod
     partition it degrades to least-outstanding.
+
+    The pod partition and the idx->view map depend only on the *identity*
+    of the live-view list - the fleet rebuilds that list exclusively on
+    scaling events - so both are cached per list and the per-arrival cost
+    is one occupancy scan over the pod's candidates, not an O(n_replicas)
+    list rebuild (the cache holds a reference to the keyed list, so a
+    recycled ``id()`` can never alias a stale entry).
     """
 
     name = "gcr_aware"
 
     def __init__(self, n_pods: int = 2) -> None:
         self.n_pods = max(1, n_pods)
+        self._cached_views: Optional[Sequence[ReplicaView]] = None
+        self._groups: Dict[int, List[ReplicaView]] = {}
+        self._by_idx: Dict[int, ReplicaView] = {}
+
+    def reset(self) -> None:
+        self._cached_views = None
+        self._groups = {}
+        self._by_idx = {}
+
+    def _sync_cache(self, views: Sequence[ReplicaView]) -> None:
+        if views is not self._cached_views:
+            self._cached_views = views
+            self._groups = {}
+            self._by_idx = {v.idx: v for v in views}
+
+    def _view_by_idx(self, views: Sequence[ReplicaView],
+                     idx: int) -> Optional[ReplicaView]:
+        self._sync_cache(views)
+        return self._by_idx.get(idx)
 
     def _partition(self, pod: int,
                    views: Sequence[ReplicaView]) -> List[ReplicaView]:
-        group = [v for v in views if v.idx % self.n_pods == pod % self.n_pods]
-        return group or list(views)
+        self._sync_cache(views)
+        pod %= self.n_pods
+        group = self._groups.get(pod)
+        if group is None:
+            group = [v for v in views if v.idx % self.n_pods == pod]
+            if not group:
+                group = list(views)
+            self._groups[pod] = group
+        return group
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         group = self._partition(req.pod, views)
-        head = {v.idx: v.headroom for v in group}
-        if any(h is None for h in head.values()):
-            # unlimited replicas in the pool: least-outstanding in-pod
-            return min(group, key=lambda v: (v.outstanding, v.idx)).idx
-        free = [v for v in group if head[v.idx] > 0]
-        if free:
-            # fill the (proportionally) emptiest active set first
-            return min(free, key=lambda v: (-head[v.idx] / v.active_limit,
-                                            v.idx)).idx
-        # all at their limit: park on the shortest normalized passive queue
-        return min(group, key=lambda v: (v.num_parked / v.active_limit,
-                                         v.idx)).idx
+        # single pass in ascending idx order; strict < keeps the first
+        # (lowest-idx) candidate on ties, matching the (key, idx) min()
+        free_idx = -1
+        free_key = 0.0
+        park_idx = -1
+        park_key = 0.0
+        for v in group:
+            limit = v.active_limit
+            if limit is None:
+                # unlimited replicas in the pool: least-outstanding in-pod
+                return min(group, key=lambda v: (v.outstanding, v.idx)).idx
+            head = limit - v.num_active
+            if head > 0:
+                # fill the (proportionally) emptiest active set first
+                key = -head / limit
+                if free_idx < 0 or key < free_key:
+                    free_idx, free_key = v.idx, key
+            elif free_idx < 0:
+                # all at their limit so far: track the shortest normalized
+                # passive queue (used only if no free slot turns up)
+                key = v.num_parked / limit
+                if park_idx < 0 or key < park_key:
+                    park_idx, park_key = v.idx, key
+        return free_idx if free_idx >= 0 else park_idx
 
 
 def _worth_following(home: ReplicaView, views: Sequence[ReplicaView],
@@ -173,8 +226,15 @@ def _worth_following(home: ReplicaView, views: Sequence[ReplicaView],
         return True          # unlimited replica: no congestion signal
     if h > min_headroom_frac * home.active_limit:
         return True          # room at home
-    norm = [v.num_parked / v.active_limit for v in views if v.active_limit]
-    best = min(norm) if norm else 0.0
+    best = None
+    for v in views:
+        limit = v.active_limit
+        if limit:
+            norm = v.num_parked / limit
+            if best is None or norm < best:
+                best = norm
+    if best is None:
+        best = 0.0
     return (home.num_parked / home.active_limit) - best <= spill_slack
 
 
@@ -192,32 +252,47 @@ class AffinityRouter(GCRAwareRouter):
     fallback placed it (its state will be warm *there* next turn).
     Replicas the autoscaler retired leave the view list, so a stale home
     entry falls through to the fallback instead of routing to a corpse.
+
+    **Cache-occupancy-aware spillover** (opt-in): with ``cache_slack > 0``
+    the spill decision consults the home replica's *published* prefix-
+    cache gauges (``cache_tokens`` / ``cache_hit_rate`` - replica-side
+    state, stale under a periodic bus like every other gauge): a home
+    whose cache is actually warm earns up to ``cache_slack`` extra
+    normalized-queue slack before the session abandons it, while a home
+    whose cache went cold (evicted out, or never hitting) spills at the
+    base threshold.  At ``cache_slack == 0.0`` (default) the gauges are
+    never read and routing is bit-identical to the queue-only rule.
     """
 
     name = "affinity"
 
     def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
-                 spill_slack: float = 0.25) -> None:
+                 spill_slack: float = 0.25,
+                 cache_slack: float = 0.0) -> None:
         super().__init__(n_pods)
         self.min_headroom_frac = min_headroom_frac
         self.spill_slack = spill_slack
+        self.cache_slack = cache_slack
         self._home: Dict[int, int] = {}     # session_id -> replica idx
 
     def reset(self) -> None:
+        super().reset()
         self._home.clear()
 
     def _follow(self, home: ReplicaView,
                 views: Sequence[ReplicaView]) -> bool:
-        return _worth_following(home, views, self.min_headroom_frac,
-                                self.spill_slack)
+        slack = self.spill_slack
+        if self.cache_slack and home.cache_tokens > 0:
+            slack += self.cache_slack * home.cache_hit_rate
+        return _worth_following(home, views, self.min_headroom_frac, slack)
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
-        sid = getattr(req, "session_id", -1)
+        sid = req.session_id
         if sid < 0:
             return super().route(req, views)
         home_idx = self._home.get(sid)
         if home_idx is not None:
-            home = next((v for v in views if v.idx == home_idx), None)
+            home = self._view_by_idx(views, home_idx)
             if home is not None and self._follow(home, views):
                 return home_idx
         i = super().route(req, views)
@@ -252,6 +327,7 @@ class PrefixAwareRouter(GCRAwareRouter):
         self._placed: Dict[int, Dict[int, int]] = {}
 
     def reset(self) -> None:
+        super().reset()
         self._placed.clear()
 
     @staticmethod
@@ -270,7 +346,8 @@ class PrefixAwareRouter(GCRAwareRouter):
         est = self._placed.get(pid)
         choice: Optional[int] = None
         if est and plen > 0:
-            by_idx = {v.idx: v for v in views}
+            self._sync_cache(views)
+            by_idx = self._by_idx
             best_score = 0.0
             for idx in sorted(est):
                 v = by_idx.get(idx)

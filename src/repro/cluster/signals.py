@@ -63,35 +63,36 @@ class ReplicaView:
     replica list - routers return it as their placement decision.
     """
 
-    __slots__ = ("idx", "_bus")
+    __slots__ = ("idx", "_bus", "_eng", "active_limit")
 
     def __init__(self, idx: int, bus: "SignalBus") -> None:
         self.idx = idx
         self._bus = bus
+        self._eng = bus.engines[idx]
+        # static configuration; reading it live is not cheating (and it
+        # never changes, so it is a plain attribute, not a property - the
+        # router's placement scan reads it once per candidate per arrival)
+        self.active_limit: Optional[int] = getattr(
+            self._eng.admission, "active_limit", None)
 
     @property
     def num_active(self) -> int:
         if self._bus.live:
-            return len(self._bus.engines[self.idx].active)
+            return len(self._eng.active)
         return self._bus.reports[self.idx].num_active
 
     @property
     def num_parked(self) -> int:
         if self._bus.live:
-            return self._bus.engines[self.idx].admission.num_parked
+            return self._eng.admission.num_parked
         return self._bus.reports[self.idx].num_parked
 
     @property
     def outstanding(self) -> int:
         if self._bus.live:
-            return self._bus.engines[self.idx].outstanding
+            e = self._eng
+            return len(e.active) + e.admission.num_parked
         return self._bus.reports[self.idx].outstanding
-
-    @property
-    def active_limit(self) -> Optional[int]:
-        # static configuration; reading it live is not cheating
-        return getattr(self._bus.engines[self.idx].admission,
-                       "active_limit", None)
 
     @property
     def headroom(self) -> Optional[int]:
@@ -106,7 +107,7 @@ class ReplicaView:
     def cache_tokens(self) -> int:
         """Prefix-cache occupancy by the last signal (0 = no cache/cold)."""
         if self._bus.live:
-            pc = self._bus.engines[self.idx].prefix_cache
+            pc = self._eng.prefix_cache
             return pc.tokens if pc else 0
         return self._bus.reports[self.idx].cache_tokens
 
@@ -115,7 +116,7 @@ class ReplicaView:
         """Lifetime prefix-hit-token rate by the last signal (0.0 when the
         replica has no cache or has never been asked)."""
         if self._bus.live:
-            pc = self._bus.engines[self.idx].prefix_cache
+            pc = self._eng.prefix_cache
             hits = pc.hit_tokens if pc else 0
             asks = pc.query_tokens if pc else 0
         else:
@@ -141,6 +142,10 @@ class SignalBus:
         self.slo = slo or SLO()
         self.period_ms = period_ms
         self.jitter_ms = jitter_ms
+        # True => consumers read engines directly (omniscient bus).  Plain
+        # attribute, not a property: the view accessors branch on it for
+        # every router read and the period never changes after construction.
+        self.live = period_ms <= 0.0
         self._rng = np.random.default_rng(seed)
         self.engines: List[SimServeEngine] = []
         self.reports: List[ReplicaReport] = []
@@ -151,11 +156,6 @@ class SignalBus:
         # and controller live in the load balancer, which counts arrivals
         # first-hand - only *replica-side* state has to cross the bus.
         self.arrivals = 0
-
-    @property
-    def live(self) -> bool:
-        """True => consumers read engines directly (omniscient bus)."""
-        return self.period_ms <= 0.0
 
     # -- replica lifecycle ---------------------------------------------------
     def register(self, engine: SimServeEngine, now_ms: float) -> int:

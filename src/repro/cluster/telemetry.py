@@ -22,6 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
+import numpy as np
+
 from ..serving.engine import Request, SimServeEngine, percentile
 
 __all__ = ["SLO", "ClusterResult", "ClusterTelemetry", "percentile"]
@@ -75,27 +77,19 @@ class ClusterResult:
 class ClusterTelemetry:
     """Accumulates fleet observations; ``finalize`` renders a ClusterResult.
 
-    The fleet calls ``sample`` after every event touching a replica, which
-    keeps peak occupancy exact without a separate sampling clock."""
+    Peak occupancy is tracked by the engines themselves
+    (``SimServeEngine.peak_active``/``peak_parked``, updated O(1) at the
+    submit outcome and step end - the points the fleet used to sample), so
+    the event loop pays nothing per event for it."""
 
     def __init__(self, slo: SLO = SLO()) -> None:
         self.slo = slo
-        self.peak_active: Dict[int, int] = {}
-        self.peak_parked: Dict[int, int] = {}
         self.scale_events: List[float] = []
         self.scale_in_events: List[float] = []
         self.spawn_ms: Dict[int, float] = {}
         self.retire_ms: Dict[int, float] = {}
         self.migrated = 0
         self.prefix_tokens_lost = 0
-
-    def sample(self, idx: int, eng: SimServeEngine) -> None:
-        a = len(eng.active)
-        p = eng.admission.num_parked
-        if a > self.peak_active.get(idx, 0):
-            self.peak_active[idx] = a
-        if p > self.peak_parked.get(idx, 0):
-            self.peak_parked[idx] = p
 
     def on_scale(self, now_ms: float) -> None:
         self.scale_events.append(now_ms)
@@ -111,28 +105,51 @@ class ClusterTelemetry:
         self.prefix_tokens_lost += prefix_tokens_lost
 
     def finalize(self, now_ms: float, replicas: List[SimServeEngine],
-                 offered: int, migrating: int = 0) -> ClusterResult:
+                 offered: int, migrating: int = 0,
+                 events: int = 0) -> ClusterResult:
         completed: List[Request] = []
         for eng in replicas:
             completed.extend(eng.completed)
         tokens = sum(eng.tokens_out for eng in replicas)
 
-        ttft = sorted(r.first_token_ms - r.arrive_ms for r in completed
-                      if r.first_token_ms >= 0)
-        per_tok = sorted((r.done_ms - r.first_token_ms)
-                         / max(1, r.gen_len - 1)
-                         for r in completed if r.first_token_ms >= 0)
-        met = [r for r in completed if self.slo.met(r)]
+        # One pass over completions, ONE sort per latency series; the
+        # warm/cold prefix split is a boolean mask carried through the
+        # TTFT argsort (a masked take of a sorted array is sorted), so no
+        # series is ever sorted twice and all percentiles - full, warm,
+        # cold - derive from the same sorted array via the shared
+        # nearest-rank rule.
+        ttft_l: List[float] = []
+        per_tok_l: List[float] = []
+        had_l: List[bool] = []
+        warm_l: List[bool] = []
+        gen_l: List[int] = []
+        for r in completed:
+            if r.first_token_ms < 0:
+                continue
+            ttft_l.append(r.first_token_ms - r.arrive_ms)
+            per_tok_l.append((r.done_ms - r.first_token_ms)
+                             / max(1, r.gen_len - 1))
+            had_l.append(r.prefix_len > 0)
+            warm_l.append(r.prefix_hit_tokens > 0)
+            gen_l.append(r.gen_len)
+        ttft_arr = np.asarray(ttft_l, dtype=np.float64)
+        per_tok_arr = np.asarray(per_tok_l, dtype=np.float64)
+        order = np.argsort(ttft_arr, kind="stable")
+        ttft = ttft_arr[order]
+        had = np.asarray(had_l, dtype=bool)[order]
+        was_warm = np.asarray(warm_l, dtype=bool)[order]
+        warm = ttft[had & was_warm]
+        cold = ttft[had & ~was_warm]
+        per_tok = np.sort(per_tok_arr)
+        # SLO accounting on the same arrays (identical comparisons to
+        # SLO.met, vectorized; completed requests always have done_ms>=0)
+        met_mask = ((ttft_arr <= self.slo.ttft_ms)
+                    & (per_tok_arr <= self.slo.per_token_ms))
+        n_met = int(np.count_nonzero(met_mask))
+        met_gen = int(np.asarray(gen_l, dtype=np.int64)[met_mask].sum()) \
+            if gen_l else 0
         dur_s = max(now_ms, 1e-9) / 1e3
 
-        # warm/cold TTFT split over requests that *had* a shareable prefix:
-        # warm landed on a replica holding (some of) it, cold recomputed
-        warm = sorted(r.first_token_ms - r.arrive_ms for r in completed
-                      if r.first_token_ms >= 0 and r.prefix_len > 0
-                      and r.prefix_hit_tokens > 0)
-        cold = sorted(r.first_token_ms - r.arrive_ms for r in completed
-                      if r.first_token_ms >= 0 and r.prefix_len > 0
-                      and r.prefix_hit_tokens == 0)
         cache_hits = sum(eng.prefix_cache.hit_tokens for eng in replicas
                          if eng.prefix_cache is not None)
         cache_asks = sum(eng.prefix_cache.query_tokens for eng in replicas
@@ -153,8 +170,8 @@ class ClusterTelemetry:
                 "completed": len(eng.completed),
                 "active_end": len(eng.active),
                 "parked_end": eng.admission.num_parked,
-                "peak_active": self.peak_active.get(i, 0),
-                "peak_parked": self.peak_parked.get(i, 0),
+                "peak_active": eng.peak_active,
+                "peak_parked": eng.peak_parked,
                 "promotions": getattr(eng.admission, "stat_promotions", 0),
                 "demotions": getattr(eng.admission, "stat_demotions", 0),
                 "spawn_ms": spawn,
@@ -171,8 +188,8 @@ class ClusterTelemetry:
             sim_ms=now_ms,
             token_throughput=tokens / dur_s,
             request_throughput=len(completed) / dur_s,
-            goodput_tok_s=sum(r.gen_len for r in met) / dur_s,
-            slo_attainment=len(met) / max(1, offered),
+            goodput_tok_s=met_gen / dur_s,
+            slo_attainment=n_met / max(1, offered),
             ttft_p50_ms=percentile(ttft, 0.50),
             ttft_p95_ms=percentile(ttft, 0.95),
             ttft_p99_ms=percentile(ttft, 0.99),
@@ -184,6 +201,7 @@ class ClusterTelemetry:
                    "scale_in_events": len(self.scale_in_events),
                    "migrated": self.migrated,
                    "migrating_end": migrating,
+                   "sim_events": float(events),
                    "replica_ms": replica_ms,
                    "prefix_hit_rate": (cache_hits / cache_asks
                                        if cache_asks else 0.0),

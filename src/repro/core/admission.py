@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 
-@dataclass
+@dataclass(slots=True)
 class StreamState:
     stream_id: int
     pod: int = 0
@@ -41,6 +41,10 @@ class StreamState:
 class GCRAdmission:
     """Generic concurrency restriction over request streams."""
 
+    __slots__ = ("active_limit", "promote_every", "active", "queue",
+                 "completions", "step", "last_demoted", "stat_fast",
+                 "stat_parked", "stat_promotions", "stat_demotions")
+
     def __init__(self, active_limit: int, promote_every: int = 64) -> None:
         if active_limit < 1:
             raise ValueError("active_limit must be >= 1")
@@ -50,6 +54,9 @@ class GCRAdmission:
         self.queue: Deque[StreamState] = deque()
         self.completions = 0          # numAcqs analogue
         self.step = 0
+        # streams demoted by the most recent release() - the engine reads
+        # this instead of rescanning its active set per completion
+        self.last_demoted: List[int] = []
         # telemetry
         self.stat_fast = 0
         self.stat_parked = 0
@@ -73,6 +80,8 @@ class GCRAdmission:
         """Stream completed.  Returns newly-admitted stream ids."""
         self.active.pop(stream_id, None)
         self.completions += 1
+        if self.last_demoted:           # reuse the (almost always) empty list
+            self.last_demoted = []
         admitted = self._work_conserve()
         if self.promote_every and \
                 self.completions % self.promote_every == 0 and self.queue:
@@ -106,12 +115,15 @@ class GCRAdmission:
         return self.queue.popleft() if self.queue else None
 
     def _work_conserve(self) -> List[int]:
+        # the per-completion fast path: admit queue heads straight into
+        # free slots (GCRPod re-generalizes this over its pod queues)
         out = []
-        while len(self.active) < self.active_limit and self.num_parked:
-            sid = self._admit_head()
-            if sid is None:
-                break
-            out.append(sid)
+        active, queue, limit = self.active, self.queue, self.active_limit
+        while queue and len(active) < limit:
+            st = queue.popleft()
+            st.admitted_at_step = self.step
+            active[st.stream_id] = st
+            out.append(st.stream_id)
         return out
 
     def promote(self) -> List[int]:
@@ -137,7 +149,7 @@ class GCRAdmission:
         oldest.enqueued_at_step = self.step
         self.queue.append(oldest)
         self.stat_demotions += 1
-        self.demoted_last = oldest.stream_id
+        self.last_demoted.append(oldest.stream_id)
         return oldest.stream_id
 
     # -- introspection -----------------------------------------------------------
@@ -152,6 +164,8 @@ class GCRAdmission:
 
 class NoAdmission:
     """Baseline: admit everything (the 'no GCR' engine)."""
+
+    last_demoted: tuple = ()          # never demotes; engine skips the scan
 
     def __init__(self) -> None:
         self.active: Dict[int, StreamState] = {}

@@ -24,6 +24,9 @@ from .admission import GCRAdmission, StreamState
 
 
 class GCRPod(GCRAdmission):
+    __slots__ = ("n_pods", "pod_rotate_every", "preferred", "pod_queues",
+                 "pod_active", "stat_rotations")
+
     def __init__(self, active_limit: int, n_pods: int = 2,
                  promote_every: int = 64,
                  pod_rotate_every: int = 256) -> None:
@@ -33,6 +36,9 @@ class GCRPod(GCRAdmission):
         self.preferred = 0
         self.pod_queues: List[Deque[StreamState]] = [
             deque() for _ in range(n_pods)]
+        # active streams per pod, maintained at the membership events so
+        # active_pod_mix() is O(n_pods), not O(active), per decode step
+        self.pod_active: List[int] = [0] * n_pods
         self.stat_rotations = 0
 
     # -- queue selection -----------------------------------------------------
@@ -49,6 +55,23 @@ class GCRPod(GCRAdmission):
         q = self._eligible_queue()
         return q.popleft() if q else None
 
+    def _admit_head(self) -> Optional[int]:
+        sid = super()._admit_head()
+        if sid is not None:
+            self.pod_active[self.active[sid].pod] += 1
+        return sid
+
+    def _work_conserve(self) -> List[int]:
+        # generic form: admission must go through _admit_head so the
+        # preferred-pod queue selection and pod counts stay correct
+        out = []
+        while len(self.active) < self.active_limit:
+            sid = self._admit_head()   # None <=> every pod queue is empty
+            if sid is None:
+                break
+            out.append(sid)
+        return out
+
     # -- overrides --------------------------------------------------------------
     def offer(self, stream_id: int, pod: int = 0) -> bool:
         st = StreamState(stream_id, pod % self.n_pods,
@@ -58,6 +81,7 @@ class GCRPod(GCRAdmission):
         if eligible and len(self.active) < self.active_limit:
             st.admitted_at_step = self.step
             self.active[stream_id] = st
+            self.pod_active[st.pod] += 1
             self.stat_fast += 1
             return True
         self.pod_queues[st.pod].append(st)
@@ -65,8 +89,12 @@ class GCRPod(GCRAdmission):
         return False
 
     def release(self, stream_id: int) -> List[int]:
-        self.active.pop(stream_id, None)
+        st = self.active.pop(stream_id, None)
+        if st is not None:
+            self.pod_active[st.pod] -= 1
         self.completions += 1
+        if self.last_demoted:           # reuse the (almost always) empty list
+            self.last_demoted = []
         if self.pod_rotate_every and \
                 self.completions % self.pod_rotate_every == 0:
             self.preferred = (self.preferred + 1) % self.n_pods
@@ -87,10 +115,12 @@ class GCRPod(GCRAdmission):
         if oldest is None:
             return None
         self.active.pop(oldest.stream_id)
+        self.pod_active[oldest.pod] -= 1
         oldest.demotions += 1
         oldest.enqueued_at_step = self.step
         self.pod_queues[oldest.pod].append(oldest)
         self.stat_demotions += 1
+        self.last_demoted.append(oldest.stream_id)
         return oldest.stream_id
 
     def cancel(self, stream_id: int) -> None:
@@ -100,6 +130,7 @@ class GCRPod(GCRAdmission):
 
     def drain(self) -> None:
         self.active.clear()
+        self.pod_active = [0] * self.n_pods
         for q in self.pod_queues:
             q.clear()
 
@@ -111,7 +142,4 @@ class GCRPod(GCRAdmission):
         """Fraction of active streams NOT on the majority pod (0 = pure)."""
         if not self.active:
             return 0.0
-        counts = [0] * self.n_pods
-        for s in self.active.values():
-            counts[s.pod] += 1
-        return 1.0 - max(counts) / len(self.active)
+        return 1.0 - max(self.pod_active) / len(self.active)

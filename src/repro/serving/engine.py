@@ -40,15 +40,17 @@ def percentile(sorted_vals: Sequence[float], q: float) -> float:
     smallest value with at least ``q`` of the mass at or below it, i.e.
     index ``ceil(q*n) - 1`` (the epsilon guards float noise like
     0.99 * 100 -> 99.00000000000001).  Shared by the engine's ServeResult
-    and the cluster telemetry so both layers report the same statistic."""
-    if not sorted_vals:
-        return 0.0
+    and the cluster telemetry so both layers report the same statistic.
+    Accepts lists and numpy arrays (telemetry sorts once with numpy and
+    derives every split from the one sorted array)."""
     n = len(sorted_vals)
+    if n == 0:
+        return 0.0
     idx = min(n - 1, max(0, math.ceil(q * n - 1e-9) - 1))
     return float(sorted_vals[idx])
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     rid: int
     prompt_len: int
@@ -69,14 +71,21 @@ class Request:
     first_token_ms: float = -1.0
     prefix_hit_tokens: int = 0    # prompt tokens served from a prefix cache
     replica: int = -1             # fleet replica that served this request
+    # engine-internal lazy-token bookkeeping (DESIGN.md 3): while active,
+    # generated == _base_gen + (engine steps - _join_step); _join_seq is
+    # the active-set insertion sequence (-1 = not active), which both
+    # validates finish-calendar entries and restores insertion order for
+    # same-step completions
+    _join_step: int = field(init=False, default=0)
+    _base_gen: int = field(init=False, default=0)
+    _join_seq: int = field(init=False, default=-1)
 
     def fresh(self) -> "Request":
         """Copy with runtime state reset, so one workload list can drive
         many engine/fleet runs without cross-contamination."""
-        return Request(rid=self.rid, prompt_len=self.prompt_len,
-                       gen_len=self.gen_len, pod=self.pod,
-                       arrive_ms=self.arrive_ms, session_id=self.session_id,
-                       prefix_id=self.prefix_id, prefix_len=self.prefix_len)
+        return Request(self.rid, self.prompt_len, self.gen_len, self.pod,
+                       self.arrive_ms, self.session_id, self.prefix_id,
+                       self.prefix_len)
 
 
 @dataclass
@@ -195,7 +204,34 @@ class SimServeEngine:
     * ``submit()`` / ``step(now)`` - externally clocked: a shared event loop
       (``cluster.fleet.Fleet``) injects arrivals and asks for one decode
       step at a time, so N replicas advance on one clock.
+
+    **Incremental accounting (DESIGN.md 3).**  Per-step observables are
+    maintained as integer counters updated O(1) at the membership events
+    (submit/admit/demote/finish) instead of O(active) rescans per step:
+
+    * ``_resident``   - sum of ``prompt_len + generated`` over the active
+      set (token counts are ints, so the incremental sum is *exact* and
+      seeded traces stay bit-identical with the rescanning core);
+    * ``_pod_count``  - active streams per pod (the cross-pod mix);
+    * ``_pending_prefill`` - streams admitted but not yet decoded, in
+      active-set insertion order (the order prefill charges and prefix
+      cache inserts must be applied in);
+    * per-stream token counts are *lazy*: a stream that joined the active
+      set at step ``j`` with ``base`` tokens has ``base + (nsteps - j)``
+      tokens after step ``nsteps``, so the per-step token loop is gone -
+      completions are detected by a (finish_step, join_seq, rid) heap and
+      materialized only at membership boundaries.  ``join_seq`` ties
+      same-step completions back to active-dict insertion order, so the
+      completion order (and with it LRU cache behavior and telemetry) is
+      bit-identical to the per-stream rescan.
     """
+
+    __slots__ = ("admission", "cost", "avg_prompt", "prefix_cache",
+                 "requests", "active", "completed", "tokens_out",
+                 "_resident", "_nsteps", "_join_seq", "_pod_count",
+                 "_pending_prefill", "_finish_heap", "_is_pod_adm",
+                 "_has_cancel", "_reports_demoted", "peak_active",
+                 "peak_parked")
 
     def __init__(self, admission, cost: Optional[StepCostModel] = None,
                  avg_prompt: int = 512,
@@ -208,6 +244,73 @@ class SimServeEngine:
         self.active: Dict[int, Request] = {}
         self.completed: List[Request] = []
         self.tokens_out = 0
+        self._reset_accounting()
+
+    # -- incremental accounting ----------------------------------------------
+    def _reset_accounting(self) -> None:
+        self._resident = 0            # sum(prompt+generated) over active
+        self._nsteps = 0              # completed decode steps
+        self._join_seq = 0            # monotone active-set insertion counter
+        self._pod_count: Dict[int, int] = {}
+        self._pending_prefill: Dict[int, Request] = {}
+        self._finish_heap: List[tuple] = []
+        self._is_pod_adm = isinstance(self.admission, GCRPod)
+        self._has_cancel = hasattr(self.admission, "cancel")
+        self._reports_demoted = hasattr(self.admission, "last_demoted")
+        # peak occupancy, tracked at the submit outcome and at step end -
+        # the exact points the fleet telemetry used to sample, so the
+        # reported peaks are unchanged while the per-event sampling cost
+        # is gone (cluster.telemetry reads these at finalize)
+        self.peak_active = 0
+        self.peak_parked = 0
+
+    def _activate(self, r: Request) -> None:
+        """Stream enters the active set (fresh admit or re-promotion)."""
+        rid = r.rid
+        gen = r.generated
+        nsteps = self._nsteps
+        self.active[rid] = r
+        seq = self._join_seq
+        self._join_seq = seq + 1
+        r._join_step = nsteps
+        r._base_gen = gen
+        r._join_seq = seq
+        self._resident += r.prompt_len + gen
+        pod = r.pod
+        pods = self._pod_count
+        pods[pod] = pods.get(pod, 0) + 1
+        heapq.heappush(self._finish_heap,
+                       (nsteps + r.gen_len - gen, seq, rid))
+        if r.first_token_ms < 0:
+            # insertion position must track the active dict's (a demoted
+            # stream re-joins at the end, so pop before re-inserting)
+            self._pending_prefill.pop(rid, None)
+            self._pending_prefill[rid] = r
+
+    def _deactivate(self, rid: int) -> Request:
+        """Stream leaves the active set; materializes its lazy token count
+        (exact: one token per step since it joined)."""
+        r = self.active.pop(rid)
+        r.generated = r._base_gen + (self._nsteps - r._join_step)
+        r._join_seq = -1
+        self._resident -= r.prompt_len + r.generated
+        c = self._pod_count[r.pod] - 1
+        if c:
+            self._pod_count[r.pod] = c
+        else:
+            del self._pod_count[r.pod]
+        self._pending_prefill.pop(rid, None)
+        return r
+
+    def _materialize_active(self) -> None:
+        """Write every active stream's exact token count back onto the
+        request (telemetry/inspection sync point); keeps the lazy
+        bookkeeping consistent so stepping can continue afterwards."""
+        nsteps = self._nsteps
+        for r in self.active.values():
+            r.generated = r._base_gen + (nsteps - r._join_step)
+            r._join_step = nsteps
+            r._base_gen = r.generated
 
     # -- steppable API (shared by run() and the cluster fleet loop) ----------
     def submit(self, r: Request) -> bool:
@@ -224,8 +327,14 @@ class SimServeEngine:
                 if self.prefix_cache is not None and r.prefix_id >= 0
                 else 0)
         if self.admission.offer(r.rid, r.pod):
-            self.active[r.rid] = r
+            self._activate(r)
+            n = len(self.active)
+            if n > self.peak_active:
+                self.peak_active = n
             return True
+        p = self.admission.num_parked
+        if p > self.peak_parked:
+            self.peak_parked = p
         return False
 
     @property
@@ -276,7 +385,11 @@ class SimServeEngine:
                 # would double-count the query's denominator
                 self.prefix_cache.query_tokens -= r.prefix_len
                 self.prefix_cache.hit_tokens -= r.prefix_hit_tokens
-        self.active.clear()
+        # materialize departing streams' exact token counts (the migration
+        # cost is billed on resident KV) and zero the active-set counters
+        for rid in list(self.active):
+            self._deactivate(rid)
+        self._finish_heap.clear()
         self.admission.drain()
         return active_moved, parked_moved
 
@@ -291,61 +404,114 @@ class SimServeEngine:
         active = self.active
         if not active:
             return 0.0, []
-        resident = sum(r.prompt_len + r.generated for r in active.values())
-        pod_mix = (adm.active_pod_mix()
-                   if isinstance(adm, GCRPod) else self._mix(active))
+        n_entry = len(active)
+        resident = self._resident       # == sum(prompt+generated), exact
+        if self._is_pod_adm:
+            pod_mix = adm.active_pod_mix()
+        elif len(self._pod_count) == 1:
+            pod_mix = 0.0               # pod-pure active set, exact
+        else:
+            pod_mix = 1.0 - max(self._pod_count.values()) / n_entry
         # streams entering their first step prefill now; prefix-cache hits
         # (r.prefix_hit_tokens, pinned at submit) are blocks already warm
         # on this replica and are not recomputed
         prefill = 0
-        for r in active.values():
-            if r.first_token_ms < 0:
-                prefill += max(0, r.prompt_len - r.prefix_hit_tokens)
-                if self.prefix_cache is not None and r.prefix_id >= 0:
+        pc = self.prefix_cache
+        pending = self._pending_prefill
+        if pending:
+            for r in pending.values():
+                uncached = r.prompt_len - r.prefix_hit_tokens
+                if uncached > 0:
+                    prefill += uncached
+                if pc is not None and r.prefix_id >= 0:
                     # after prefill the prompt KV blocks exist on this
                     # replica, so a follow-up turn arriving mid-decode can
                     # already hit them (completion later extends the entry
                     # over the generated tokens)
-                    self.prefix_cache.insert(r.prefix_id, r.prompt_len)
-        dt = self.cost.step_ms(len(active), resident, pod_mix, prefill)
+                    pc.insert(r.prefix_id, r.prompt_len)
+        # StepCostModel.step_ms, inlined term-for-term (identical float
+        # evaluation order): this is the innermost line of every bench
+        cost = self.cost
+        dt = cost.t_fixed_ms + cost.t_tok_ms * n_entry
+        load = resident * cost.kv_bytes_per_tok / cost.hbm_budget
+        if load > 1.0:
+            dt += cost.thrash_coef * (load - 1.0) ** 2 * max(1, n_entry)
+        dt += cost.t_xpod_ms * pod_mix
+        if prefill:
+            dt += cost.t_prefill_ms_per_tok * prefill
         end = now + dt
         adm.tick()
 
-        finished: List[int] = []
-        for r in active.values():
-            r.generated += 1
-            self.tokens_out += 1
-            if r.first_token_ms < 0:
+        # every stream active at step entry decodes one token: O(1) counter
+        # bumps; per-stream counts stay lazy until a membership boundary
+        self._nsteps += 1
+        cur = self._nsteps
+        self.tokens_out += n_entry
+        self._resident += n_entry
+        if pending:
+            for r in pending.values():
                 r.first_token_ms = end
-            if r.generated >= r.gen_len:
-                r.done_ms = end
-                finished.append(r.rid)
+            pending.clear()
+
+        # completions: drain the finish calendar up to this step, drop
+        # stale entries (demoted/re-joined streams), and restore active-set
+        # insertion order via the join sequence numbers
+        finish_heap = self._finish_heap
+        requests = self.requests
+        finished: List[tuple] = []
+        while finish_heap and finish_heap[0][0] <= cur:
+            _fs, seq, rid = heapq.heappop(finish_heap)
+            if requests[rid]._join_seq == seq:
+                finished.append((seq, rid))
+        if not finished:
+            return dt, []
+        finished.sort()
+        # stamp completions before any release processing: an admission may
+        # try to re-admit a just-finished (demoted) stream, and the guard
+        # below reads done_ms
+        for _seq, rid in finished:
+            requests[rid].done_ms = end
         done: List[Request] = []
-        for rid in finished:
+        reports_demoted = self._reports_demoted
+        for _seq, rid in finished:
             if rid in active:
-                done.append(active.pop(rid))
+                done.append(self._deactivate(rid))
             else:                   # demoted after finishing: un-park it
-                done.append(self.requests[rid])
-                if hasattr(adm, "cancel"):
+                done.append(requests[rid])
+                if self._has_cancel:
                     adm.cancel(rid)
             for new_rid in adm.release(rid):
                 # promoted/work-conserved admissions (may demote someone)
-                if new_rid in self.requests and \
-                        new_rid not in active and \
-                        self.requests[new_rid].done_ms < 0:
-                    active[new_rid] = self.requests[new_rid]
-            # demotions: active streams no longer in adm.active
-            for rid2 in list(active.keys()):
-                if rid2 not in getattr(adm, "active", {rid2: None}):
-                    active.pop(rid2)
-        if self.prefix_cache is not None:
+                if new_rid in requests and new_rid not in active and \
+                        requests[new_rid].done_ms < 0:
+                    self._activate(requests[new_rid])
+            # demotions: active streams the admission evicted during this
+            # release (reported O(1); generic admissions fall back to the
+            # legacy scan)
+            if reports_demoted:
+                for rid2 in adm.last_demoted:
+                    if rid2 in active:
+                        self._deactivate(rid2)
+            else:
+                for rid2 in list(active.keys()):
+                    if rid2 not in getattr(adm, "active", {rid2: None}):
+                        self._deactivate(rid2)
+        if pc is not None:
             for r in done:
                 if r.prefix_id >= 0:
                     # the finished turn's full history is exactly the next
                     # turn's shareable prefix
-                    self.prefix_cache.insert(r.prefix_id,
-                                             r.prompt_len + r.generated)
+                    pc.insert(r.prefix_id, r.prompt_len + r.generated)
         self.completed.extend(done)
+        # post-completion occupancy peaks (work-conserve refills the active
+        # set and demotions grow the queue mid-step; this is the legacy
+        # post-step sampling point)
+        n = len(active)
+        if n > self.peak_active:
+            self.peak_active = n
+        p = adm.num_parked
+        if p > self.peak_parked:
+            self.peak_parked = p
         return dt, done
 
     # -- self-clocked driver -------------------------------------------------
@@ -355,6 +521,7 @@ class SimServeEngine:
         self.active.clear()
         self.completed.clear()
         self.tokens_out = 0
+        self._reset_accounting()
         adm = self.admission
         now = 0.0
         pending = sorted(requests, key=lambda r: r.arrive_ms)
@@ -380,6 +547,7 @@ class SimServeEngine:
 
     def _result(self, now: float) -> ServeResult:
         adm = self.admission
+        self._materialize_active()      # per-stream counts for unfairness
         completed = self.completed
         lat = sorted((r.done_ms - r.arrive_ms) for r in completed) or [0.0]
         ttft = [r.first_token_ms - r.arrive_ms for r in completed
@@ -404,16 +572,6 @@ class SimServeEngine:
                 "parked_end": adm.num_parked,
             },
         )
-
-    @staticmethod
-    def _mix(active: Dict[int, Request]) -> float:
-        if not active:
-            return 0.0
-        pods: Dict[int, int] = {}
-        for r in active.values():
-            pods[r.pod] = pods.get(r.pod, 0) + 1
-        return 1.0 - max(pods.values()) / len(active)
-
 
 def make_admission(kind: str, active_limit: int, n_pods: int = 2,
                    promote_every: int = 64):

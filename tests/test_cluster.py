@@ -17,7 +17,8 @@ from repro.cluster import (SLO, Fleet, FleetConfig, ClusterTelemetry,
                            make_workload, percentile, poisson, replay,
                            run_fleet, sessions, to_trace, uniform)
 from repro.cluster.router import ROUTERS
-from repro.serving.engine import PrefixCache, Request, StepCostModel
+from repro.serving.engine import (PrefixCache, Request, SimServeEngine,
+                                  StepCostModel, make_admission)
 
 SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
 LIMIT = 32
@@ -713,3 +714,306 @@ def test_capacity_aware_routing_beats_blind_on_mixed_pool():
     blind_small = blind.per_replica[1]["peak_parked"]
     aware_small = aware.per_replica[1]["peak_parked"]
     assert aware_small <= blind_small
+
+
+# ---------------------------------------------------------------------------
+# vectorized core: incremental counters vs brute force, reference
+# equivalence (the goldens in tests/test_golden.py pin the same contract
+# bit-exactly against recorded traces for all six router policies)
+# ---------------------------------------------------------------------------
+
+
+class _CheckedEngine(SimServeEngine):
+    """SimServeEngine that re-derives every incremental counter by brute
+    force before and after each step and asserts exact agreement."""
+
+    __slots__ = ()
+
+    def _check(self) -> None:
+        active = self.active
+        nsteps = self._nsteps
+        resident = sum(r.prompt_len + r._base_gen + (nsteps - r._join_step)
+                       for r in active.values())
+        assert resident == self._resident, "resident counter drifted"
+        pods = {}
+        for r in active.values():
+            pods[r.pod] = pods.get(r.pod, 0) + 1
+        assert pods == self._pod_count, "pod counters drifted"
+        pend = [r.rid for r in active.values() if r.first_token_ms < 0]
+        assert pend == list(self._pending_prefill), \
+            "pending-prefill set lost active-dict order"
+        assert set(active) == set(self.admission.active), \
+            "engine/admission active sets diverged"
+        if self._is_pod_adm:
+            counts = [0] * self.admission.n_pods
+            for s in self.admission.active.values():
+                counts[s.pod] += 1
+            assert counts == self.admission.pod_active, \
+                "GCRPod pod_active counters drifted"
+
+    def step(self, now):
+        self._check()
+        out = super().step(now)
+        self._check()
+        return out
+
+
+def test_incremental_counters_match_bruteforce():
+    """Fleet-driven shadow check: O(1) counters == O(active) recount at
+    every step boundary, through admissions, demotions, prefix caches,
+    scale-out/scale-in drains, and migrations."""
+    cost = dataclasses.replace(COST, t_prefill_ms_per_tok=0.05)
+    cfg = FleetConfig(n_replicas=3, admission="gcr", active_limit=LIMIT,
+                      n_pods=2, cost=cost, prefix_cache_tokens=50_000)
+    reqs = sessions(2.0 * SAT_RPS, 1_500.0, SPEC, seed=4, think_ms=600.0)
+
+    def checked(idx=None):
+        base = cfg.make_engine(idx)
+        return _CheckedEngine(base.admission, cost=base.cost,
+                              prefix_cache=base.prefix_cache)
+
+    schedule = [("out", 0), ("none", 0), ("in", 1)]
+    state = {"n": 0}
+
+    def scaler(fleet, now_ms):
+        n = state["n"]
+        state["n"] += 1
+        if n >= len(schedule):
+            return None
+        action, k = schedule[n]
+        if action == "out":
+            return ScaleDecision(add=checked(), reason="scripted")
+        if action == "in":
+            live = fleet.live_indices()
+            return ScaleDecision(remove=live[k % len(live)],
+                                 reason="scripted")
+        return None
+
+    fleet = Fleet([checked(i) for i in range(3)],
+                  make_router("affinity", seed=3, n_pods=2),
+                  ClusterTelemetry(SLO()), autoscaler=scaler,
+                  autoscale_every_ms=300.0)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live + res.stats["migrating_end"] == res.offered
+    assert res.completed > 0
+
+
+def test_pod_admission_counters_match_bruteforce():
+    """Same shadow check through GCR-POD (preferred-pod rotation and
+    per-pod queues exercise every admission override)."""
+    eng = _CheckedEngine(make_admission("gcr_pod", 8, n_pods=2,
+                                        promote_every=8), cost=COST)
+    reqs = poisson(4 * SAT_RPS, 800.0, SPEC, seed=12)
+    eng.run([r.fresh() for r in reqs], max_ms=60_000.0)
+    assert len(eng.completed) > 0
+
+
+class _ReferenceEngine:
+    """Straight port of the pre-vectorization per-step rescan algorithm:
+    the executable specification the incremental core must match, stream
+    for stream and stamp for stamp."""
+
+    def __init__(self, admission, cost, prefix_cache=None):
+        self.admission = admission
+        self.cost = cost
+        self.prefix_cache = prefix_cache
+        self.requests = {}
+        self.active = {}
+        self.completed = []
+        self.tokens_out = 0
+
+    def submit(self, r):
+        self.requests[r.rid] = r
+        if r.first_token_ms < 0:
+            self.requests[r.rid].prefix_hit_tokens = (
+                self.prefix_cache.lookup(r.prefix_id, r.prefix_len)
+                if self.prefix_cache is not None and r.prefix_id >= 0
+                else 0)
+        if self.admission.offer(r.rid, r.pod):
+            self.active[r.rid] = r
+            return True
+        return False
+
+    def step(self, now):
+        from repro.core.pod_aware import GCRPod
+        adm, active = self.admission, self.active
+        if not active:
+            return 0.0, []
+        resident = sum(r.prompt_len + r.generated for r in active.values())
+        if isinstance(adm, GCRPod):
+            pod_mix = 1.0 - max(
+                [sum(1 for s in adm.active.values() if s.pod == p)
+                 for p in range(adm.n_pods)]) / len(adm.active)
+        else:
+            pods = {}
+            for r in active.values():
+                pods[r.pod] = pods.get(r.pod, 0) + 1
+            pod_mix = 1.0 - max(pods.values()) / len(active)
+        prefill = 0
+        for r in active.values():
+            if r.first_token_ms < 0:
+                prefill += max(0, r.prompt_len - r.prefix_hit_tokens)
+                if self.prefix_cache is not None and r.prefix_id >= 0:
+                    self.prefix_cache.insert(r.prefix_id, r.prompt_len)
+        dt = self.cost.step_ms(len(active), resident, pod_mix, prefill)
+        end = now + dt
+        adm.tick()
+        finished = []
+        for r in active.values():
+            r.generated += 1
+            self.tokens_out += 1
+            if r.first_token_ms < 0:
+                r.first_token_ms = end
+            if r.generated >= r.gen_len:
+                r.done_ms = end
+                finished.append(r.rid)
+        done = []
+        for rid in finished:
+            if rid in active:
+                done.append(active.pop(rid))
+            else:
+                done.append(self.requests[rid])
+                if hasattr(adm, "cancel"):
+                    adm.cancel(rid)
+            for new_rid in adm.release(rid):
+                if new_rid in self.requests and new_rid not in active \
+                        and self.requests[new_rid].done_ms < 0:
+                    active[new_rid] = self.requests[new_rid]
+            for rid2 in list(active.keys()):
+                if rid2 not in getattr(adm, "active", {rid2: None}):
+                    active.pop(rid2)
+        if self.prefix_cache is not None:
+            for r in done:
+                if r.prefix_id >= 0:
+                    self.prefix_cache.insert(r.prefix_id,
+                                             r.prompt_len + r.generated)
+        self.completed.extend(done)
+        return dt, done
+
+    def run(self, requests, max_ms=60_000.0):
+        now, pi = 0.0, 0
+        pending = sorted(requests, key=lambda r: r.arrive_ms)
+        while now < max_ms:
+            while pi < len(pending) and pending[pi].arrive_ms <= now:
+                self.submit(pending[pi])
+                pi += 1
+            if not self.active and pi >= len(pending) \
+                    and not self.admission.num_parked:
+                break
+            if not self.active:
+                if pi < len(pending):
+                    now = max(now, pending[pi].arrive_ms)
+                    continue
+                break
+            dt, _ = self.step(now)
+            now += dt
+        return now
+
+
+@pytest.mark.parametrize("admission", ["none", "gcr", "gcr_pod"])
+def test_vectorized_engine_matches_reference_rescan(admission):
+    """Bit-exact trace equality (replica stamps in float hex) between the
+    incremental engine and the O(active)-rescan reference, per admission
+    class, on a prefix-cached multi-turn workload."""
+    from repro.serving.engine import make_admission as mk
+    cost = dataclasses.replace(COST, t_prefill_ms_per_tok=0.05)
+    reqs = sessions(3.0 * SAT_RPS, 1_200.0, SPEC, seed=8, think_ms=500.0)
+
+    fast = SimServeEngine(mk(admission, 24, promote_every=16),
+                          cost=cost, prefix_cache=PrefixCache(40_000))
+    ref = _ReferenceEngine(mk(admission, 24, promote_every=16),
+                           cost=cost, prefix_cache=PrefixCache(40_000))
+    fast_res = fast.run([r.fresh() for r in reqs], max_ms=45_000.0)
+    ref_end = ref.run([r.fresh() for r in reqs], max_ms=45_000.0)
+
+    def trace(engine):
+        return sorted(
+            (r.rid, r.generated, r.prefix_hit_tokens,
+             r.first_token_ms.hex(), r.done_ms.hex())
+            for r in engine.requests.values())
+
+    assert trace(fast) == trace(ref)
+    assert [r.rid for r in fast.completed] == [r.rid for r in ref.completed]
+    assert fast.tokens_out == ref.tokens_out
+    assert fast_res.sim_ms.hex() == ref_end.hex()
+    if fast.prefix_cache is not None:
+        assert fast.prefix_cache.tokens == ref.prefix_cache.tokens
+        assert fast.prefix_cache.hit_tokens == ref.prefix_cache.hit_tokens
+
+
+# ---------------------------------------------------------------------------
+# cache-occupancy-aware spillover (opt-in affinity knob)
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_cache_aware_spillover_ab():
+    """Deterministic A/B: with a zero queue-slack threshold the stock
+    affinity router abandons warm homes the moment they fill; giving the
+    spill decision the bus's cache gauges (cache_slack > 0) retains warm
+    homes and measurably raises the fleet prefix hit rate AND goodput.
+    With cache_slack=0 the gauges are never consulted and routing is
+    bit-identical to the stock rule."""
+    from repro.cluster.router import AffinityRouter
+    spec1 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=1)
+    cost = dataclasses.replace(knee_cost(spec1, LIMIT, oversub=2.0),
+                               t_prefill_ms_per_tok=0.05)
+    cfg = FleetConfig(n_replicas=3, admission="gcr", active_limit=LIMIT,
+                      n_pods=1, cost=cost, prefix_cache_tokens=100_000)
+    cap = est_capacity_rps(spec1, LIMIT, 3, cost)
+    reqs = sessions(2.5 * cap, 2_500.0, spec1, seed=9, think_ms=600.0)
+
+    stock = run_fleet(reqs, AffinityRouter(n_pods=1, spill_slack=0.0),
+                      cfg, max_ms=120_000.0)
+    aware = run_fleet(reqs, AffinityRouter(n_pods=1, spill_slack=0.0,
+                                           cache_slack=5.0),
+                      cfg, max_ms=120_000.0)
+    for res in (stock, aware):
+        live = sum(r["active_end"] + r["parked_end"]
+                   for r in res.per_replica)
+        assert res.completed + live + res.stats["migrating_end"] \
+            == res.offered
+    assert aware.stats["prefix_hit_rate"] > stock.stats["prefix_hit_rate"]
+    assert aware.goodput_tok_s > stock.goodput_tok_s
+
+    # default-off bit-identity: cache_slack=0.0 IS the stock router
+    a = run_fleet(reqs, make_router("affinity", seed=1, n_pods=1), cfg,
+                  max_ms=120_000.0)
+    b = run_fleet(reqs, AffinityRouter(n_pods=1, cache_slack=0.0), cfg,
+                  max_ms=120_000.0)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+# ---------------------------------------------------------------------------
+# perf guard: normalized-regression math (no benches run here)
+# ---------------------------------------------------------------------------
+
+
+def test_perf_guard_check_math(tmp_path, monkeypatch):
+    import json
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks import perf_guard
+
+    def fake_measure():
+        return {"calib_s": 0.1, "suites": {
+            "a": {"wall_s": 1.0, "events": 100,
+                  "events_per_s": 100.0, "norm_events_per_calib": 10.0}}}
+
+    monkeypatch.setattr(perf_guard, "measure", fake_measure)
+    base = tmp_path / "BENCH_cluster.json"
+    monkeypatch.setattr(perf_guard, "BASELINE_PATH", base)
+    # no baseline => fail loudly, not silently pass
+    assert perf_guard.check(1.5) == 1
+    # within budget (same speed)
+    base.write_text(json.dumps(fake_measure()))
+    assert perf_guard.check(1.5) == 0
+    # baseline 2x faster than current => regression at factor 1.5
+    twice = fake_measure()
+    twice["suites"]["a"]["norm_events_per_calib"] = 20.0
+    base.write_text(json.dumps(twice))
+    assert perf_guard.check(1.5) == 1
+    # ...but tolerated at factor 3
+    assert perf_guard.check(3.0) == 0

@@ -181,6 +181,28 @@ def test_fleet_invariants_fuzzed(seed, kind, router, schedule, cut,
                  staleness_ms=staleness)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 5_000),
+       router=st.sampled_from(["gcr_aware", "affinity", "p2c"]),
+       n_replicas=st.sampled_from([32, 48, 64]),
+       cut=st.sampled_from([173.5, 411.25, 902.125, 60_000.0]))
+def test_fleet_invariants_at_scale_knobs(seed, router, n_replicas, cut):
+    """The vectorized-core scale regime: >= 32-replica fleets with the
+    virtual clock truncated at fractional-millisecond cuts (mid
+    calendar-bucket, mid step, mid migration) - placement liveness,
+    conservation, and percentile monotonicity must all hold, and the run
+    must be a pure function of its seeds (bit-identical re-run)."""
+    import dataclasses
+
+    from repro.cluster.invariants import guarded_case
+
+    def go():
+        return guarded_case(seed, "sessions", router, (), max_ms=cut,
+                            duration_ms=700.0, n_replicas=n_replicas)
+
+    assert dataclasses.asdict(go()) == dataclasses.asdict(go())
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1_000),
        router=st.sampled_from(["p2c", "affinity", "gcr_aware"]),
