@@ -29,7 +29,19 @@ Claims asserted (deterministic under the fixed seed):
   TTFT-p99 and goodput-under-SLO (warm routing skips prefix prefill),
   while on the session-free Poisson workload its goodput stays within 5%
   of ``gcr_aware`` (it falls back to exactly that policy - the paper's
-  uncontended-overhead discipline, held at L2).
+  uncontended-overhead discipline, held at L2);
+* **pod-scoped beats pool-scalar** on a 2-pod ``gcr_pod`` fleet under
+  skewed pod load (one steady pod beside one swinging pod): the
+  pod-scoped seasonal ``SLOAutoscaler`` spawns into the burning pod and
+  retires from the idle one, beating the pool-scalar controller on
+  goodput-under-SLO AND attainment while billing FEWER replica-ms (the
+  scalar sizes the pool for the blended demand, lands half its spawns
+  in the steady pod by index parity, and its global backlog gate blocks
+  scale-in while any pod burns);
+* **coldest-cache victim selection** strictly reduces
+  ``prefix_tokens_lost`` vs least-outstanding under an identical scripted
+  scale-in schedule on the shared-prefix ``sessions`` workload (Zipf
+  prefix groups): warm state is part of what a shrink decision spends.
 
 Grid points are independent (seed x config x policy) pure functions, so
 every sweep here is declared as ``scale_bench.GridPoint`` rows and
@@ -45,8 +57,12 @@ from __future__ import annotations
 import argparse
 from typing import List, Optional, Tuple
 
-from repro.cluster import (WorkloadSpec, assert_conserved, conserved_count,
+import dataclasses
+
+from repro.cluster import (FleetConfig, ScaleDecision, SLOAutoscaler,
+                           WorkloadSpec, assert_conserved, conserved_count,
                            est_capacity_rps, knee_cost, make_workload,
+                           pod_skewed_diurnal, run_fleet, select_victim,
                            sessions)
 
 try:                                    # python -m benchmarks.run / pytest
@@ -395,13 +411,165 @@ def session_affinity(smoke: bool = False,
     return rows
 
 
+def pod_scoped_scaling(smoke: bool = False,
+                       jobs: Optional[int] = None) -> List[Row]:
+    """Topology-scoped vs pool-scalar scaling on a skewed 2-pod fleet.
+
+    Pod 0 carries steady traffic (~0.8x one replica); pod 1 swings
+    through three diurnal cycles up to ~4x one replica.  Both controllers
+    run IDENTICAL predictive+seasonal ``SLOAutoscaler`` knobs - the only
+    variable is ``pod_scoped``: reading per-pod ``PodView`` rollups,
+    spawning pod-assigned replicas, applying per-pod cooldowns, and
+    running the (shared) seasonal model per pod so pod 1 is sized ahead
+    of its own phase.  Asserted (deterministic, the claim the tentpole
+    lands): pod-scoped beats pool-scalar on goodput-under-SLO AND SLO
+    attainment while billing FEWER replica-ms.  The scalar loses twice
+    over - half its breach spawns land in the steady pod (index parity),
+    and its global parked-backlog gate blocks scale-in while pod 1
+    burns - which is precisely the aggregate-signal blindness the
+    per-pod rollups exist to remove.
+    """
+    del smoke, jobs     # one scenario either way; runs in seconds
+    limit = 32
+    n_pods = 2
+    duration_ms, cycles = 24_000.0, 3
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=n_pods)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
+    cap1 = est_capacity_rps(spec, limit, 1, cost)
+    reqs = pod_skewed_diurnal(4.0 * cap1, duration_ms, spec, seed=SEED,
+                              cycles=cycles, phases=(0.0, 0.25),
+                              amp_scale=(0.2, 1.0), floors=(1.0, 0.05))
+    cfg = FleetConfig(n_replicas=2, admission="gcr_pod", active_limit=limit,
+                      n_pods=n_pods, cost=cost)
+
+    def go(pod_scoped):
+        # identical knobs on both arms; pod_scoped is the ONLY variable
+        scaler = SLOAutoscaler(cfg, max_replicas=8, predictive=True,
+                               rps_per_replica=cap1,
+                               season_period_ms=duration_ms / cycles,
+                               cooldown_in_ms=1500.0,
+                               pod_scoped=pod_scoped)
+        return run_fleet(reqs, "gcr_aware", cfg, max_ms=240_000.0,
+                         autoscale=scaler, router_seed=1)
+
+    scalar, pod = go(False), go(True)
+    rows: List[Row] = []
+    for name, res in (("pool_scalar", scalar), ("pod_scoped", pod)):
+        assert_conserved(res, f"pod_scope/{name}")
+        rows.append((f"cluster/pod_scope/{name}_goodput_tok_s",
+                     res.goodput_tok_s, ""))
+        rows.append((f"cluster/pod_scope/{name}_attainment",
+                     res.slo_attainment, ""))
+        rows.append((f"cluster/pod_scope/{name}_replica_ms",
+                     res.stats["replica_ms"], ""))
+        rows.append((f"cluster/pod_scope/{name}_scale_out",
+                     res.stats["scale_events"], ""))
+        rows.append((f"cluster/pod_scope/{name}_scale_in",
+                     res.stats["scale_in_events"], ""))
+        for d in res.per_pod:
+            rows.append((f"cluster/pod_scope/{name}_pod{d['pod']:.0f}"
+                         "_attainment", d["attainment"], ""))
+    rows.append(("cluster/claims/pod_scoped_goodput_gain",
+                 pod.goodput_tok_s / max(scalar.goodput_tok_s, 1e-9), ""))
+    rows.append(("cluster/claims/pod_scoped_replica_ms_ratio",
+                 pod.stats["replica_ms"]
+                 / max(scalar.stats["replica_ms"], 1e-9), ""))
+    assert pod.goodput_tok_s > scalar.goodput_tok_s, \
+        "pod-scoped scaling should out-goodput pool-scalar on skewed pods"
+    assert pod.slo_attainment >= scalar.slo_attainment, \
+        (f"pod-scoped attainment {pod.slo_attainment:.1%} below "
+         f"pool-scalar {scalar.slo_attainment:.1%}")
+    assert pod.stats["replica_ms"] < scalar.stats["replica_ms"], \
+        (f"pod-scoped billed {pod.stats['replica_ms']:.0f} replica-ms vs "
+         f"scalar {scalar.stats['replica_ms']:.0f} - pod scale-in didn't pay")
+    return rows
+
+
+def victim_selection(smoke: bool = False,
+                     jobs: Optional[int] = None) -> List[Row]:
+    """Coldest-cache vs least-outstanding scale-in victims on the
+    shared-prefix sessions workload.
+
+    Sessions share Zipf-sized system-prompt prefix groups
+    (``sessions(prefix_groups=...)``), routed by ``affinity`` over an
+    over-provisioned 6-replica pool that a scripted schedule shrinks to
+    3 at fixed ticks - both runs retire at the SAME virtual times, so
+    the only difference is WHO dies: the replica with the fewest
+    unfinished streams (which at light load degenerates to "lowest
+    index", often the warmest home) vs the replica whose published cache
+    holds the least (``select_victim('coldest_cache')``, the policy
+    ``SLOAutoscaler(victim=...)`` uses).  Asserted (deterministic):
+    coldest-cache strictly reduces ``prefix_tokens_lost``.
+    """
+    del smoke, jobs     # two runs; seconds either way
+    limit = 32
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=1)
+    cost = dataclasses.replace(knee_cost(spec, limit, oversub=HBM_OVERSUB),
+                               t_prefill_ms_per_tok=0.05)
+    cfg = FleetConfig(n_replicas=6, admission="gcr", active_limit=limit,
+                      n_pods=1, cost=cost, prefix_cache_tokens=200_000)
+    cap = est_capacity_rps(spec, limit, 6, cost)
+    reqs = sessions(0.25 * cap, 10_000.0, spec, seed=SEED, think_ms=1200.0,
+                    prefix_groups=12, group_zipf=1.3)
+
+    def scripted(victim, ticks=(8, 14, 20)):
+        state = {"n": 0}
+
+        def scaler(fleet, now_ms):
+            state["n"] += 1
+            if state["n"] in ticks:
+                live = fleet.live_indices()
+                if len(live) <= 2:
+                    return None
+                reports = fleet.bus.snapshot(now_ms, live)
+                k = select_victim(victim, reports, live)
+                return ScaleDecision(remove=live[k], victim=victim,
+                                     reason=f"scripted {victim}")
+            return None
+
+        return scaler
+
+    least = run_fleet(reqs, "affinity", cfg, max_ms=240_000.0,
+                      autoscale=scripted("least_outstanding"),
+                      router_seed=1)
+    coldest = run_fleet(reqs, "affinity", cfg, max_ms=240_000.0,
+                        autoscale=scripted("coldest_cache"), router_seed=1)
+    rows: List[Row] = []
+    for name, res in (("least_outstanding", least),
+                      ("coldest_cache", coldest)):
+        assert_conserved(res, f"victim/{name}")
+        rows.append((f"cluster/victim/{name}_prefix_tokens_lost",
+                     res.stats["prefix_tokens_lost"], ""))
+        rows.append((f"cluster/victim/{name}_goodput_tok_s",
+                     res.goodput_tok_s, ""))
+        rows.append((f"cluster/victim/{name}_hit_rate",
+                     res.stats["prefix_hit_rate"], ""))
+    # identical scripted schedule: the comparison isolates the victim
+    assert least.stats["scale_in_events"] \
+        == coldest.stats["scale_in_events"] == 3
+    lost_ratio = (coldest.stats["prefix_tokens_lost"]
+                  / max(least.stats["prefix_tokens_lost"], 1e-9))
+    rows.append(("cluster/claims/coldest_victim_lost_ratio", lost_ratio, ""))
+    assert coldest.stats["prefix_tokens_lost"] \
+        < least.stats["prefix_tokens_lost"], \
+        (f"coldest-cache victims lost {coldest.stats['prefix_tokens_lost']:.0f}"
+         f" warm tokens vs least-outstanding "
+         f"{least.stats['prefix_tokens_lost']:.0f}")
+    return rows
+
+
 def control_plane(smoke: bool = False,
                   jobs: Optional[int] = None) -> List[Row]:
-    """Staleness + autoscaling + heterogeneity + affinity scenarios as one
-    suite (all of it runs in --smoke too, so CI asserts every claim)."""
+    """Staleness + autoscaling + heterogeneity + affinity + topology
+    scenarios as one suite (all of it runs in --smoke too, so CI asserts
+    every claim)."""
     return (staleness_resilience(smoke, jobs) + slo_scaling(smoke, jobs)
             + heterogeneous_pool(smoke, jobs)
-            + session_affinity(smoke, jobs))
+            + session_affinity(smoke, jobs)
+            + pod_scoped_scaling(smoke, jobs)
+            + victim_selection(smoke, jobs))
 
 
 def main() -> None:

@@ -239,6 +239,39 @@ def fig_cluster_affinity() -> List[Row]:
     return rows
 
 
+def fig_perf_trajectory() -> List[Row]:
+    """Per-PR perf trajectory of the simulation core (ROADMAP item):
+    events/sec for every suite in every stamped ``BENCH_cluster.json``
+    history entry, the curve the append-only ``perf_guard --write``
+    discipline exists to grow.  Asserts the trajectory's structural
+    invariants (non-empty, stamps strictly increasing) and that the
+    latest entry still measures every suite the history has ever
+    measured - a suite silently dropped from the baseline would
+    otherwise stop being policed."""
+    try:                                # python -m benchmarks.run / pytest
+        from benchmarks.perf_guard import load_history, verify_history
+    except ImportError:                 # script mode: python benchmarks/...
+        from perf_guard import load_history, verify_history
+    history = load_history()
+    problems = verify_history(history)
+    assert not problems, f"perf trajectory corrupt: {problems}"
+    rows: List[Row] = [("perf_traj/entries", float(len(history)), "")]
+    ever = set()
+    for entry in history:
+        stamp = entry["stamp"]
+        label = entry.get("label", "")
+        for suite, s in sorted(entry["suites"].items()):
+            ever.add(suite)
+            rows.append((f"perf_traj/{suite}/stamp{stamp}_events_per_s",
+                         s["events_per_s"], label))
+            rows.append((f"perf_traj/{suite}/stamp{stamp}_norm",
+                         s["norm_events_per_calib"], label))
+    latest = set(history[-1]["suites"])
+    assert ever <= latest, \
+        f"suites dropped from the latest entry: {sorted(ever - latest)}"
+    return rows
+
+
 def table_machines() -> List[Row]:
     """Cross-machine sanity (X6-2 / X5-4 / T7-2 models): GCR gain holds."""
     rows = []

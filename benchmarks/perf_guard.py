@@ -1,12 +1,23 @@
-"""Perf regression guard for the virtual-time simulation core.
+"""Perf regression guard + per-PR perf trajectory for the simulation core.
 
 The repo's quantitative claims all run on the L1/L2 simulators, so the
 simulators' own speed is a tracked artifact: this module times a fixed,
-seeded suite of simulation kernels, records wall-clock and
+seeded suite of simulation kernels and records wall-clock and
 **simulated-events/sec** into ``BENCH_cluster.json`` (committed at the
-repo root - the perf trajectory's baseline), and in ``--check`` mode
-fails if any suite regressed more than ``--factor`` (default 1.5x)
-against that baseline.
+repo root).
+
+``BENCH_cluster.json`` is an **append-only trajectory**, not a single
+baseline: ``{"history": [entry, entry, ...]}`` where each entry carries a
+monotone ``stamp`` (its position in the PR sequence), an optional
+``label``, and the measured suites.  ``--write`` APPENDS a stamped entry
+(it never rewrites past entries - history is immutable; a legacy
+single-entry file is migrated to ``history[0]`` first), ``--check``
+compares the current build against the LATEST entry and fails if any
+suite regressed more than ``--factor`` (default 1.5x), and
+``benchmarks/figures.py:fig_perf_trajectory`` plots events/sec per suite
+over the whole history.  CI additionally guards that the committed
+history only ever grows (the previous entries are byte-identical a
+prefix of the new file).
 
 Wall-clock is machine-dependent, so comparisons are *normalized*: a tiny
 fixed pure-Python loop is timed first (``calib_s``) and every suite's
@@ -19,7 +30,7 @@ refactor changes them, the goldens (tests/test_golden.py) decide whether
 that was intentional - the guard only polices speed.
 
 Usage:
-    PYTHONPATH=src python benchmarks/perf_guard.py --write   # new baseline
+    PYTHONPATH=src python benchmarks/perf_guard.py --write [--label PRn]
     PYTHONPATH=src python benchmarks/perf_guard.py --check   # CI gate
 """
 
@@ -140,11 +151,87 @@ def measure() -> Dict:
     return {"calib_s": round(last_calib, 4), "suites": suites}
 
 
+# -- append-only trajectory ---------------------------------------------------
+
+def load_history(path: pathlib.Path = None) -> List[Dict]:
+    """The stamped entry list from ``BENCH_cluster.json``.  A legacy
+    single-entry file (pre-trajectory format: one ``{calib_s, suites}``
+    dict) reads as a one-entry history stamped 1."""
+    path = path or BASELINE_PATH
+    data = json.loads(path.read_text())
+    if "history" in data:
+        return data["history"]
+    entry = dict(data)
+    entry.setdefault("stamp", 1)
+    entry.setdefault("label", "legacy-baseline")
+    return [entry]
+
+
+def verify_history(history: List[Dict]) -> List[str]:
+    """Structural invariants of the trajectory: non-empty, stamps
+    strictly increasing (append-only order), every entry measured."""
+    problems = []
+    if not history:
+        problems.append("history is empty")
+    stamps = [e.get("stamp") for e in history]
+    if any(s is None for s in stamps):
+        problems.append("entry missing its stamp")
+    elif any(b <= a for a, b in zip(stamps, stamps[1:])):
+        problems.append(f"stamps not strictly increasing: {stamps}")
+    for e in history:
+        if not e.get("suites"):
+            problems.append(f"entry {e.get('stamp')} has no suites")
+    return problems
+
+
+def append_entry(label: str = "") -> Dict:
+    """Measure and APPEND a stamped entry (never rewrites past entries)."""
+    history = load_history() if BASELINE_PATH.exists() else []
+    problems = verify_history(history) if history else []
+    if problems:
+        raise SystemExit("perf_guard: refusing to append to a corrupt "
+                         "history:\n  " + "\n  ".join(problems))
+    entry = measure()
+    entry["stamp"] = (history[-1]["stamp"] + 1) if history else 1
+    entry["label"] = label or f"entry-{entry['stamp']}"
+    history.append(entry)
+    BASELINE_PATH.write_text(
+        json.dumps({"history": history}, indent=2, sort_keys=True) + "\n")
+    return entry
+
+
+def verify_append(old_path: pathlib.Path,
+                  new_path: pathlib.Path = None) -> int:
+    """CI guard: every history entry in ``old_path`` (the merge base's
+    file) must survive untouched, in order, as a prefix of the current
+    file's history - --write appends, nothing ever rewrites the past."""
+    new_path = new_path or BASELINE_PATH
+    old_hist = load_history(old_path)
+    new_hist = load_history(new_path)
+    problems = verify_history(new_hist)
+    for i, entry in enumerate(old_hist):
+        if i >= len(new_hist) or new_hist[i] != entry:
+            problems.append(f"history entry {i} (stamp "
+                            f"{entry.get('stamp')}) was rewritten or "
+                            "dropped - the trajectory is append-only")
+    if problems:
+        print("perf_guard: history violated\n  " + "\n  ".join(problems))
+        return 1
+    print(f"perf_guard: history ok ({len(old_hist)} -> {len(new_hist)} "
+          "entries, prefix preserved)")
+    return 0
+
+
 def check(factor: float) -> int:
     if not BASELINE_PATH.exists():
         print(f"perf_guard: no baseline at {BASELINE_PATH}; run --write")
         return 1
-    base = json.loads(BASELINE_PATH.read_text())
+    history = load_history()
+    problems = verify_history(history)
+    if problems:
+        print("perf_guard: corrupt history\n  " + "\n  ".join(problems))
+        return 1
+    base = history[-1]          # regression gate: latest committed entry
     got = measure()
     failures = []
     for name, b in base["suites"].items():
@@ -179,21 +266,28 @@ def check(factor: float) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--write", action="store_true",
-                    help=f"write a fresh baseline to {BASELINE_PATH}")
+                    help=f"append a stamped entry to {BASELINE_PATH}")
+    ap.add_argument("--label", default="",
+                    help="label for the appended entry (e.g. 'PR5')")
     ap.add_argument("--check", action="store_true",
-                    help="compare against the committed baseline "
+                    help="compare against the latest committed entry "
                          "(the default action; flag kept for explicit CI "
                          "invocations)")
     ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR,
                     help="max allowed normalized slowdown (default 1.5, "
                          "env PERF_GUARD_FACTOR)")
+    ap.add_argument("--verify-append", metavar="BASE_JSON", default=None,
+                    help="CI guard: assert BASE_JSON's history entries "
+                         "survive as an untouched prefix of the current "
+                         "file (no measuring)")
     args = ap.parse_args()
+    if args.verify_append:
+        raise SystemExit(verify_append(pathlib.Path(args.verify_append)))
     if args.write:
-        data = measure()
-        BASELINE_PATH.write_text(json.dumps(data, indent=2, sort_keys=True)
-                                 + "\n")
-        print(f"wrote {BASELINE_PATH}")
-        for name, s in data["suites"].items():
+        entry = append_entry(args.label)
+        print(f"appended stamp {entry['stamp']} ({entry['label']}) "
+              f"to {BASELINE_PATH}")
+        for name, s in entry["suites"].items():
             print(f"  {name:26s} {s['events_per_s']:>12,.0f} ev/s "
                   f"wall {s['wall_s']:.2f}s")
         return

@@ -42,6 +42,7 @@ def _suites():
         ("threads", apps.real_threads_microbench),
         ("fig_cluster", figures.fig_cluster_collapse),
         ("fig_affinity", figures.fig_cluster_affinity),
+        ("fig_perf_traj", figures.fig_perf_trajectory),
         ("serving", serving_bench.serving_collapse),
         ("cluster", cluster_bench.cluster_collapse),
         ("cluster_ctrl", cluster_bench.control_plane),

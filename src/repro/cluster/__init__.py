@@ -11,8 +11,9 @@ pluggable routing with a capacity-aware GCR-occupancy policy
 telemetry (``telemetry``).
 """
 
-from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
-                         SLOAutoscaler, make_autoscaler)
+from .controller import (VICTIM_POLICIES, MigrationCost,
+                         QueueDepthAutoscaler, ScaleDecision, SLOAutoscaler,
+                         make_autoscaler, select_victim)
 from .fleet import (Fleet, FleetConfig, est_capacity_rps, knee_cost,
                     run_fleet)
 from .invariants import (PlacementGuard, assert_conserved,
@@ -21,19 +22,24 @@ from .router import (ROUTERS, AffinityRouter, GCRAwareRouter,
                      LeastOutstandingRouter, PowerOfTwoRouter,
                      PrefixAwareRouter, RoundRobinRouter, Router,
                      make_router)
-from .signals import ReplicaReport, ReplicaView, SignalBus
+from .signals import PodView, ReplicaReport, ReplicaView, SignalBus
 from .telemetry import SLO, ClusterResult, ClusterTelemetry, percentile
+from .topology import FleetTopology
 from .workload import (WORKLOADS, WorkloadSpec, bursty, diurnal,
-                       make_workload, poisson, replay, sessions, to_trace,
-                       uniform)
+                       make_workload, pod_skewed_diurnal, poisson, replay,
+                       sessions, to_trace, uniform)
 
 __all__ = [
     "Fleet",
     "FleetConfig",
+    "FleetTopology",
+    "PodView",
     "QueueDepthAutoscaler",
     "SLOAutoscaler",
     "ScaleDecision",
     "MigrationCost",
+    "VICTIM_POLICIES",
+    "select_victim",
     "make_autoscaler",
     "run_fleet",
     "knee_cost",
@@ -64,6 +70,7 @@ __all__ = [
     "poisson",
     "bursty",
     "diurnal",
+    "pod_skewed_diurnal",
     "sessions",
     "replay",
     "to_trace",

@@ -52,11 +52,12 @@ from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
 from .router import Router, make_router
 from .signals import ReplicaView, SignalBus
 from .telemetry import ClusterResult, ClusterTelemetry, SLO
+from .topology import FleetTopology
 from .workload import WorkloadSpec
 
-__all__ = ["Fleet", "FleetConfig", "QueueDepthAutoscaler", "SLOAutoscaler",
-           "ScaleDecision", "MigrationCost", "knee_cost", "est_capacity_rps",
-           "run_fleet"]
+__all__ = ["Fleet", "FleetConfig", "FleetTopology", "QueueDepthAutoscaler",
+           "SLOAutoscaler", "ScaleDecision", "MigrationCost", "knee_cost",
+           "est_capacity_rps", "run_fleet"]
 
 
 def knee_cost(spec: WorkloadSpec, active_limit: int,
@@ -140,11 +141,18 @@ class Fleet:
                  autoscaler: Optional[Callable] = None,
                  autoscale_every_ms: float = 500.0,
                  bus: Optional[SignalBus] = None,
-                 migration: Optional[MigrationCost] = None) -> None:
+                 migration: Optional[MigrationCost] = None,
+                 topology: Optional[FleetTopology] = None) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
         self.replicas = replicas
         self.router = router
+        # one replica<->pod partition for router, controller, telemetry:
+        # adopt the router's (pod-affine policies carry one) so placement
+        # and scale decisions can never disagree about who serves where
+        self.topology = (topology
+                         or getattr(router, "topology", None)
+                         or FleetTopology(1))
         self.telemetry = telemetry or ClusterTelemetry()
         self.autoscaler = autoscaler
         self.autoscale_every_ms = autoscale_every_ms
@@ -183,12 +191,19 @@ class Fleet:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     # -- scaling -------------------------------------------------------------
-    def _scale_out(self, eng: SimServeEngine, t: float) -> None:
+    def _scale_out(self, eng: SimServeEngine, t: float,
+                   pod: Optional[int] = None) -> None:
         self.replicas.append(eng)
         self._stepping.append(False)
         self._step_end.append(0.0)
         self.retired.append(False)
         idx = self.bus.register(eng, t)
+        # pod-targeted spawn: record the assignment on the shared
+        # topology BEFORE rebuilding views, so the router's next
+        # partition already files the new replica under the right pod
+        # (pod=None keeps the static idx % n_pods rule - bit-identical
+        # for pool-scalar controllers)
+        self.topology.assign(idx, pod)
         self.telemetry.on_spawn(idx, t)
         self.telemetry.on_scale(t)
         self._rebuild_live_views()
@@ -243,8 +258,11 @@ class Fleet:
                               "Fleet (or use run_fleet) per run")
         self._ran = True
         # routers carry LB-side state (rotation counters, p2c RNG, sticky
-        # session maps); re-arm it so routing depends only on seeds
+        # session maps); re-arm it so routing depends only on seeds.  The
+        # topology likewise drops explicit spawn assignments: they belong
+        # to one run's scale history.
         self.router.reset()
+        self.topology.begin_run()
         self._heap = []
         self._seq = itertools.count()
         self._stepping = [False] * len(self.replicas)
@@ -289,6 +307,8 @@ class Fleet:
         retired = self.retired
         route = self.router.route
         bus = self.bus
+        pod_arrivals = bus.pod_arrivals
+        topo_pods = self.topology.n_pods
         heappush, heappop = heapq.heappush, heapq.heappop
         seq = self._seq
         ai, n_arr = 0, len(arrivals)
@@ -329,6 +349,13 @@ class Fleet:
                 if kind == "arrive":
                     injected += 1
                     bus.arrivals += 1
+                    # per-pod arrival share, same LB-side freshness as
+                    # the fleet counter (migrants were already counted).
+                    # Bucket by the pod the router will actually serve
+                    # (it reduces modulo the partition), so out-of-range
+                    # request pods never vanish from the rollups
+                    p = payload.pod % topo_pods
+                    pod_arrivals[p] = pod_arrivals.get(p, 0) + 1
                 else:
                     self._migrating -= 1
                 i = route(payload, self._live_views)
@@ -357,7 +384,7 @@ class Fleet:
                     decision = ScaleDecision(add=decision)
                 if decision is not None:
                     if decision.add is not None:
-                        self._scale_out(decision.add, t)
+                        self._scale_out(decision.add, t, decision.pod)
                     elif decision.remove is not None:
                         self._scale_in(decision.remove, t)
                 # keep ticking while any work remains on the heap
@@ -374,7 +401,9 @@ class Fleet:
         self._events = events
         return self.telemetry.finalize(end, self.replicas, injected,
                                        migrating=self._migrating,
-                                       events=events)
+                                       events=events,
+                                       topology=self.topology,
+                                       pod_arrivals=dict(pod_arrivals))
 
 
 def run_fleet(requests: List[Request], router: Union[Router, str],
@@ -387,7 +416,10 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
               signal_seed: int = 0,
               max_replicas: int = 8,
               rps_per_replica: Optional[float] = None,
-              router_seed: Optional[int] = None) -> ClusterResult:
+              router_seed: Optional[int] = None,
+              victim: str = "least_outstanding",
+              pod_scoped: bool = False,
+              season_period_ms: Optional[float] = None) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
     ``router`` is a built ``Router`` or a policy name; a name is resolved
@@ -401,18 +433,30 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
     callable.  ``staleness_ms`` > 0 makes every routing/scaling signal
     come from the bus's last published report (plus uniform
     ``jitter_ms`` per publish, seeded by ``signal_seed``).
+    ``victim``/``pod_scoped``/``season_period_ms`` shape the SLO
+    controller kinds (see ``SLOAutoscaler``); defaults are the legacy
+    pool-scalar policy.  One ``FleetTopology`` built from ``cfg.n_pods``
+    is shared by the router (by-name construction), the fleet, and the
+    controller, so pod-scoped decisions and pod-affine routing read the
+    same replica<->pod partition.
     """
     cfg = cfg or FleetConfig()
     slo = slo or SLO()
     if isinstance(router, str):
+        topo = FleetTopology(cfg.n_pods)
         router = make_router(
             router, seed=(signal_seed if router_seed is None
-                          else router_seed), n_pods=cfg.n_pods)
+                          else router_seed), n_pods=cfg.n_pods,
+            topology=topo)
+    else:
+        topo = getattr(router, "topology", None) or FleetTopology(cfg.n_pods)
     telem = ClusterTelemetry(slo)
     bus = SignalBus(slo=slo, period_ms=staleness_ms, jitter_ms=jitter_ms,
                     seed=signal_seed)
     scaler = make_autoscaler(autoscale, cfg, rps_per_replica=rps_per_replica,
-                             max_replicas=max_replicas)
+                             max_replicas=max_replicas, victim=victim,
+                             pod_scoped=pod_scoped,
+                             season_period_ms=season_period_ms)
     fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
-                  bus=bus)
+                  bus=bus, topology=topo)
     return fleet.run(requests, max_ms=max_ms)

@@ -64,6 +64,9 @@ class PlacementGuard(Router):
     def __init__(self, inner: Router) -> None:
         self.inner = inner
         self.name = f"guard({inner.name})"
+        # forward the shared partition so the fleet adopts the inner
+        # policy's topology through the guard
+        self.topology = getattr(inner, "topology", None)
         self.placements: List[Tuple[int, int]] = []
 
     def reset(self) -> None:
@@ -97,7 +100,11 @@ def guarded_case(seed: int, kind: str, router_name: str,
     ``schedule`` scripts the autoscaler: entry ``i`` fires on the i-th
     scale tick - ``("out", _)`` spawns a replica, ``("in", k)`` retires
     the ``k % len(live)``-th live replica (the fleet itself refuses to
-    drain the last one), anything else is a no-op tick.
+    drain the last one), ``("out_pod", p)`` spawns a replica *assigned to
+    pod* ``p % n_pods`` (the topology-scoped placement path),
+    ``("in_pod", p)`` retires the first live replica the shared topology
+    files under pod ``p % n_pods`` (falling back to any live replica if
+    the pod is empty), anything else is a no-op tick.
     """
     # local imports: this module is imported by router/telemetry consumers
     # that must not pay for (or cycle into) the fleet machinery
@@ -107,6 +114,7 @@ def guarded_case(seed: int, kind: str, router_name: str,
     from .router import make_router
     from .signals import SignalBus
     from .telemetry import SLO, ClusterTelemetry
+    from .topology import FleetTopology
     from .workload import WorkloadSpec, make_workload
 
     spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
@@ -129,20 +137,33 @@ def guarded_case(seed: int, kind: str, router_name: str,
         action, k = steps[tick]
         if action == "out":
             return ScaleDecision(add=cfg.make_engine(), reason="scripted")
+        if action == "out_pod":
+            return ScaleDecision(add=cfg.make_engine(), pod=k % 2,
+                                 reason="scripted pod spawn")
         if action == "in":
             live = fleet.live_indices()
             return ScaleDecision(remove=live[k % len(live)],
                                  reason="scripted")
+        if action == "in_pod":
+            pod_of = fleet.topology.pod_of
+            live = fleet.live_indices()
+            in_pod = [i for i in live if pod_of(i) == k % 2] or live
+            return ScaleDecision(remove=in_pod[0], pod=k % 2,
+                                 victim="scripted",
+                                 reason="scripted pod retire")
         return None
 
     scaler.tick = 0
-    guard = PlacementGuard(make_router(router_name, seed=seed, n_pods=2))
+    topo = FleetTopology(2)
+    guard = PlacementGuard(make_router(router_name, seed=seed, n_pods=2,
+                                       topology=topo))
     fleet = Fleet(cfg.make_engines(), guard,
                   ClusterTelemetry(SLO()), autoscaler=scaler,
                   autoscale_every_ms=100.0,
                   bus=SignalBus(slo=SLO(), period_ms=staleness_ms,
                                 jitter_ms=(10.0 if staleness_ms else 0.0),
-                                seed=seed))
+                                seed=seed),
+                  topology=topo)
     res = fleet.run(reqs, max_ms=max_ms)
     tag = f"{kind}/{router_name}/seed={seed}/sched={steps}/max={max_ms}"
     assert_conserved(res, tag)

@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from .signals import ReplicaView
+from .topology import FleetTopology
 
 ROUTERS = ("round_robin", "least_outstanding", "p2c", "gcr_aware",
            "affinity", "prefix_aware")
@@ -63,9 +64,14 @@ class Router:
     shrink between calls (autoscaler), so policies must index it afresh
     each time and return ``view.idx`` (the fleet-wide replica index),
     never a position in ``views``.
+
+    Pod-aware policies carry a ``topology`` (the shared
+    ``FleetTopology``); the fleet adopts it so router partition, spawn
+    placement, and controller rollups all read one replica<->pod map.
     """
 
     name = "base"
+    topology: Optional[FleetTopology] = None
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         raise NotImplementedError
@@ -153,8 +159,14 @@ class GCRAwareRouter(Router):
 
     name = "gcr_aware"
 
-    def __init__(self, n_pods: int = 2) -> None:
-        self.n_pods = max(1, n_pods)
+    def __init__(self, n_pods: int = 2,
+                 topology: Optional[FleetTopology] = None) -> None:
+        # the partition is owned by the shared FleetTopology (built here
+        # when the caller passes only a pod count); replica i serves pod
+        # topology.pod_of(i) - the static i % n_pods rule unless a
+        # pod-targeted spawn recorded an explicit assignment
+        self.topology = topology or FleetTopology(n_pods)
+        self.n_pods = self.topology.n_pods
         self._cached_views: Optional[Sequence[ReplicaView]] = None
         self._groups: Dict[int, List[ReplicaView]] = {}
         self._by_idx: Dict[int, ReplicaView] = {}
@@ -181,7 +193,8 @@ class GCRAwareRouter(Router):
         pod %= self.n_pods
         group = self._groups.get(pod)
         if group is None:
-            group = [v for v in views if v.idx % self.n_pods == pod]
+            pod_of = self.topology.pod_of
+            group = [v for v in views if pod_of(v.idx) == pod]
             if not group:
                 group = list(views)
             self._groups[pod] = group
@@ -268,8 +281,9 @@ class AffinityRouter(GCRAwareRouter):
 
     def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
                  spill_slack: float = 0.25,
-                 cache_slack: float = 0.0) -> None:
-        super().__init__(n_pods)
+                 cache_slack: float = 0.0,
+                 topology: Optional[FleetTopology] = None) -> None:
+        super().__init__(n_pods, topology)
         self.min_headroom_frac = min_headroom_frac
         self.spill_slack = spill_slack
         self.cache_slack = cache_slack
@@ -320,8 +334,9 @@ class PrefixAwareRouter(GCRAwareRouter):
     name = "prefix_aware"
 
     def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
-                 spill_slack: float = 0.25) -> None:
-        super().__init__(n_pods)
+                 spill_slack: float = 0.25,
+                 topology: Optional[FleetTopology] = None) -> None:
+        super().__init__(n_pods, topology)
         self.min_headroom_frac = min_headroom_frac
         self.spill_slack = spill_slack
         self._placed: Dict[int, Dict[int, int]] = {}
@@ -369,10 +384,14 @@ class PrefixAwareRouter(GCRAwareRouter):
         return choice
 
 
-def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:
+def make_router(name: str, seed: int = 0, n_pods: int = 2,
+                topology: Optional[FleetTopology] = None) -> Router:
     """Build a routing policy.  ``seed`` pins every stochastic policy
     (today: ``p2c``); call sites must thread their run seed through so a
-    fleet run is a pure function of its seeds."""
+    fleet run is a pure function of its seeds.  ``topology`` shares one
+    replica<->pod partition with the fleet/controller (``run_fleet``
+    threads it); omitted, pod-aware policies build their own from
+    ``n_pods`` (the static partition, identical for default fleets)."""
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "least_outstanding":
@@ -380,9 +399,9 @@ def make_router(name: str, seed: int = 0, n_pods: int = 2) -> Router:
     if name == "p2c":
         return PowerOfTwoRouter(seed)
     if name == "gcr_aware":
-        return GCRAwareRouter(n_pods)
+        return GCRAwareRouter(n_pods, topology)
     if name == "affinity":
-        return AffinityRouter(n_pods)
+        return AffinityRouter(n_pods, topology=topology)
     if name == "prefix_aware":
-        return PrefixAwareRouter(n_pods)
+        return PrefixAwareRouter(n_pods, topology=topology)
     raise ValueError(f"unknown router {name!r}")

@@ -18,7 +18,15 @@ this instant.  This module models that signal path:
   omniscient live bus and reproduces the pre-bus routing bit-exactly;
 * ``ReplicaView``    - the router-facing occupancy accessor: live-engine
   reads on the live bus, frozen-report reads otherwise.  ``active_limit``
-  is configuration, not telemetry, so it is never stale.
+  is configuration, not telemetry, so it is never stale;
+* ``PodView``        - one pod's rollup of those same reports (occupancy,
+  parked backlog, cumulative completions/SLO-met, cache warmth, arrival
+  share), keyed by a shared ``FleetTopology``.  Pod rollups ride the
+  **same stale-publish discipline** as every per-replica gauge: they sum
+  the last *published* reports, so a pod-scoped controller is exactly as
+  stale as a pool-scalar one.  Per-pod arrival counters are the one
+  exception, like the fleet arrival counter: the LB counts arrivals
+  first-hand.
 
 Publish events are sequenced by the fleet's event heap (``fleet.py``), so
 staleness interacts with arrivals/steps deterministically under a seed.
@@ -27,12 +35,13 @@ staleness interacts with arrivals/steps deterministically under a seed.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..serving.engine import SimServeEngine
 from .telemetry import SLO
+from .topology import FleetTopology
 
 
 @dataclass(frozen=True)
@@ -52,6 +61,50 @@ class ReplicaReport:
     cache_tokens: int = 0         # prefix KV tokens resident right now
     cache_hit_tokens: int = 0     # cumulative prefix tokens served warm
     cache_query_tokens: int = 0   # cumulative prefix tokens looked up
+    cache_evicted_tokens: int = 0  # cumulative prefix tokens evicted
+
+
+@dataclass(frozen=True)
+class PodView:
+    """One pod's rollup of the last published replica reports.
+
+    Occupancy gauges (``num_active``/``num_parked``/``capacity``/cache
+    occupancy) sum over the pod's *live* replicas; cumulative counters
+    (``completed``/``slo_met``/cache hit economics) sum over every
+    replica ever assigned to the pod, retired included, so windowed
+    deltas stay monotone across a pod-scoped scale-in.  ``arrivals`` is
+    the LB-side per-pod arrival counter (always fresh, like the fleet
+    counter).  ``capacity`` is the summed active-set limit of the pod's
+    live replicas (configuration, never stale); ``unlimited`` is True
+    when any live member has no limit (capacity is then a floor).
+    """
+
+    pod: int
+    replicas: Tuple[int, ...]     # live replica idxs serving this pod
+    num_active: int
+    num_parked: int
+    capacity: int
+    unlimited: bool
+    completed: int                # cumulative, all replicas ever in pod
+    slo_met: int                  # cumulative, all replicas ever in pod
+    arrivals: int                 # cumulative pod arrivals (LB-side)
+    cache_tokens: int             # live replicas' resident prefix KV
+    cache_hit_tokens: int
+    cache_query_tokens: int
+
+    @property
+    def outstanding(self) -> int:
+        return self.num_active + self.num_parked
+
+    @property
+    def utilization(self) -> float:
+        """Active load over live capacity (0.0 for an empty pod)."""
+        return self.num_active / self.capacity if self.capacity else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return (self.cache_hit_tokens / self.cache_query_tokens
+                if self.cache_query_tokens else 0.0)
 
 
 class ReplicaView:
@@ -156,6 +209,9 @@ class SignalBus:
         # and controller live in the load balancer, which counts arrivals
         # first-hand - only *replica-side* state has to cross the bus.
         self.arrivals = 0
+        # per-pod arrival counters, same LB-side freshness discipline
+        # (the fleet loop bumps these as it injects each request)
+        self.pod_arrivals: Dict[int, int] = {}
 
     # -- replica lifecycle ---------------------------------------------------
     def register(self, engine: SimServeEngine, now_ms: float) -> int:
@@ -187,7 +243,8 @@ class SignalBus:
             slo_met=self._slo_met[idx],
             cache_tokens=occ["cache_tokens"],
             cache_hit_tokens=occ["cache_hit_tokens"],
-            cache_query_tokens=occ["cache_query_tokens"])
+            cache_query_tokens=occ["cache_query_tokens"],
+            cache_evicted_tokens=occ["cache_evicted_tokens"])
 
     def publish(self, idx: int, now_ms: float) -> None:
         """Capture replica ``idx``'s state; consumers see it from now on."""
@@ -210,3 +267,53 @@ class SignalBus:
             for i in indices:
                 self.publish(i, now_ms)
         return [self.reports[i] for i in indices]
+
+    def pod_views(self, topology: FleetTopology, live: Sequence[int],
+                  now_ms: float) -> List[PodView]:
+        """Roll the last published reports up per pod (one ``PodView``
+        per pod of ``topology``, empty pods included).
+
+        Cumulative counters sum over EVERY registered replica in the pod
+        (retired replicas keep their history, so a pod's windowed deltas
+        never go negative across a scale-in); occupancy/cache gauges sum
+        over the pod's ``live`` members only.  On the live bus this
+        captures fresh reports first (same degradation contract as
+        ``snapshot``); on a periodic bus the rollup is exactly as stale
+        as the router's per-replica view.
+        """
+        reports = self.snapshot(now_ms, range(len(self.engines)))
+        live_set = set(live)
+        n_pods = topology.n_pods
+        members: List[List[int]] = [[] for _ in range(n_pods)]
+        active = [0] * n_pods
+        parked = [0] * n_pods
+        cap = [0] * n_pods
+        unlimited = [False] * n_pods
+        done = [0] * n_pods
+        met = [0] * n_pods
+        ctok = [0] * n_pods
+        chit = [0] * n_pods
+        cask = [0] * n_pods
+        for i, rep in enumerate(reports):
+            p = topology.pod_of(i)
+            done[p] += rep.completed
+            met[p] += rep.slo_met
+            chit[p] += rep.cache_hit_tokens
+            cask[p] += rep.cache_query_tokens
+            if i in live_set:
+                members[p].append(i)
+                active[p] += rep.num_active
+                parked[p] += rep.num_parked
+                ctok[p] += rep.cache_tokens
+                if rep.active_limit is None:
+                    unlimited[p] = True
+                else:
+                    cap[p] += rep.active_limit
+        return [PodView(pod=p, replicas=tuple(members[p]),
+                        num_active=active[p], num_parked=parked[p],
+                        capacity=cap[p], unlimited=unlimited[p],
+                        completed=done[p], slo_met=met[p],
+                        arrivals=self.pod_arrivals.get(p, 0),
+                        cache_tokens=ctok[p], cache_hit_tokens=chit[p],
+                        cache_query_tokens=cask[p])
+                for p in range(n_pods)]

@@ -14,13 +14,18 @@ tokens delivered by requests that met their SLO.  This module aggregates:
 * prefix-cache economics: fleet-wide hit rate over queried prefix
   tokens, TTFT split **warm vs cold** (did the turn land where its
   prefix was cached?), and warm tokens destroyed by scale-in - the
-  observables that separate an affinity router from ``gcr_aware``.
+  observables that separate an affinity router from ``gcr_aware``;
+* per-pod rollups (``ClusterResult.per_pod``): each pod's replica
+  count, arrivals, completions, SLO attainment, and goodput, keyed by
+  the fleet's shared ``FleetTopology`` - the observable a pod-scoped
+  scale decision is judged on (a pool-scalar controller can look
+  healthy in aggregate while one pod burns).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -61,6 +66,7 @@ class ClusterResult:
     per_token_p95_ms: float
     per_token_p99_ms: float
     per_replica: List[Dict[str, float]] = field(default_factory=list)
+    per_pod: List[Dict[str, float]] = field(default_factory=list)
     stats: Dict[str, float] = field(default_factory=dict)
 
     def summary(self) -> str:
@@ -106,7 +112,9 @@ class ClusterTelemetry:
 
     def finalize(self, now_ms: float, replicas: List[SimServeEngine],
                  offered: int, migrating: int = 0,
-                 events: int = 0) -> ClusterResult:
+                 events: int = 0, topology=None,
+                 pod_arrivals: Optional[Dict[int, int]] = None
+                 ) -> ClusterResult:
         completed: List[Request] = []
         for eng in replicas:
             completed.extend(eng.completed)
@@ -123,6 +131,7 @@ class ClusterTelemetry:
         had_l: List[bool] = []
         warm_l: List[bool] = []
         gen_l: List[int] = []
+        pod_l: List[int] = []
         for r in completed:
             if r.first_token_ms < 0:
                 continue
@@ -132,6 +141,7 @@ class ClusterTelemetry:
             had_l.append(r.prefix_len > 0)
             warm_l.append(r.prefix_hit_tokens > 0)
             gen_l.append(r.gen_len)
+            pod_l.append(r.pod)
         ttft_arr = np.asarray(ttft_l, dtype=np.float64)
         per_tok_arr = np.asarray(per_tok_l, dtype=np.float64)
         order = np.argsort(ttft_arr, kind="stable")
@@ -155,6 +165,37 @@ class ClusterTelemetry:
         cache_asks = sum(eng.prefix_cache.query_tokens for eng in replicas
                          if eng.prefix_cache is not None)
 
+        # per-pod rollups: request-pod view of completions/attainment
+        # (goodput is judged where the traffic lives) plus the replica
+        # count the topology files under the pod (capacity view)
+        per_pod: List[Dict[str, float]] = []
+        if topology is not None:
+            pod_arr_in = pod_arrivals or {}
+            # bucket by the pod the router served (requests reduce
+            # modulo the partition), matching the fleet's arrival rows
+            pod_np = np.asarray(pod_l, dtype=np.int64) % topology.n_pods
+            for p in range(topology.n_pods):
+                sel = pod_np == p
+                done_p = int(np.count_nonzero(sel))
+                met_p = int(np.count_nonzero(met_mask & sel))
+                met_gen_p = int(np.asarray(gen_l, dtype=np.int64)
+                                [met_mask & sel].sum()) if gen_l else 0
+                # capacity view: replicas currently filed under the pod
+                # and not retired (cumulative history lives in PodView)
+                n_replicas_p = sum(1 for i in range(len(replicas))
+                                   if topology.pod_of(i) == p
+                                   and i not in self.retire_ms)
+                arr_p = pod_arr_in.get(p, 0)
+                per_pod.append({
+                    "pod": p,
+                    "replicas": n_replicas_p,
+                    "arrivals": arr_p,
+                    "completed": done_p,
+                    "slo_met": met_p,
+                    "attainment": met_p / max(1, arr_p),
+                    "goodput_tok_s": met_gen_p / dur_s,
+                })
+
         per_replica = []
         replica_ms = 0.0
         for i, eng in enumerate(replicas):
@@ -166,6 +207,7 @@ class ClusterTelemetry:
             replica_ms += life
             pc = eng.prefix_cache
             per_replica.append({
+                "pod": topology.pod_of(i) if topology is not None else 0,
                 "tokens": eng.tokens_out,
                 "completed": len(eng.completed),
                 "active_end": len(eng.active),
@@ -197,6 +239,7 @@ class ClusterTelemetry:
             per_token_p95_ms=percentile(per_tok, 0.95),
             per_token_p99_ms=percentile(per_tok, 0.99),
             per_replica=per_replica,
+            per_pod=per_pod,
             stats={"scale_events": len(self.scale_events),
                    "scale_in_events": len(self.scale_in_events),
                    "migrated": self.migrated,

@@ -34,7 +34,7 @@ user re-prompts whether or not the previous answer was fast).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -145,11 +145,19 @@ def bursty(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
 
 def diurnal(rps_peak: float, duration_ms: float,
             spec: WorkloadSpec = DEFAULT_SPEC, seed: int = 0,
-            floor: float = 0.1, start_rid: int = 0) -> List[Request]:
-    """Sinusoidal ramp: rate(t) = peak * (floor + (1-floor) sin^2(pi t/T)).
+            floor: float = 0.1, start_rid: int = 0,
+            cycles: int = 1, phase: float = 0.0) -> List[Request]:
+    """Sinusoidal ramp:
+    rate(t) = peak * (floor + (1-floor) sin^2(pi (cycles t/T + phase))).
 
     Implemented by thinning a homogeneous Poisson at the peak rate, so the
-    arrival stream is exact, not binned.
+    arrival stream is exact, not binned.  ``cycles`` repeats the daily
+    curve (a multi-day trace for seasonality-aware controllers);
+    ``phase`` shifts it in units of a full cycle, so two streams at
+    phases 0 and 0.25 peak a quarter-day apart.  The defaults
+    ``cycles=1, phase=0.0`` evaluate the exact historical expression
+    (``1*t/T + 0.0 == t/T`` in floats), so existing seeded traces are
+    bit-identical.
     """
     if rps_peak <= 0:
         return []
@@ -161,17 +169,59 @@ def diurnal(rps_peak: float, duration_ms: float,
         t += rng.exponential(1.0 / rate_per_ms)
         if t >= duration_ms:
             break
-        frac = floor + (1.0 - floor) * np.sin(np.pi * t / duration_ms) ** 2
+        frac = floor + (1.0 - floor) \
+            * np.sin(np.pi * (cycles * t / duration_ms + phase)) ** 2
         if rng.uniform() < frac:
             times.append(t)
     return _materialize(times, spec, rng, start_rid)
+
+
+def pod_skewed_diurnal(rps_peak: float, duration_ms: float,
+                       spec: WorkloadSpec = DEFAULT_SPEC, seed: int = 0,
+                       floor: float = 0.1, cycles: int = 1,
+                       phases: Sequence[float] = (0.0, 0.25),
+                       amp_scale: Optional[Sequence[float]] = None,
+                       floors: Optional[Sequence[float]] = None
+                       ) -> List[Request]:
+    """Per-pod skewed diurnal load: pod ``p`` receives its own diurnal
+    stream at ``phases[p]`` of a cycle with peak
+    ``rps_peak * amp_scale[p]`` and floor ``floors[p]``, so the pods
+    saturate at *different times and depths* - the workload where a
+    pool-scalar controller wastes spawns on whichever pod index parity
+    points at, while a pod-scoped controller grows the pod that is
+    actually burning.  ``floors[p] = 1.0`` makes pod ``p`` a flat
+    (phase-free) stream - the steady-traffic pod beside a swinging one
+    is the hardest skew for aggregate signals, which see only the blend.
+    Each pod's stream draws from an independent seeded generator
+    (``seed + p``); requests are force-stamped with their pod and merged
+    by arrival time with globally unique rids.
+    """
+    amp_scale = amp_scale if amp_scale is not None else [1.0] * len(phases)
+    floors = floors if floors is not None else [floor] * len(phases)
+    streams: List[List[Request]] = []
+    offset = 0
+    for p, phase in enumerate(phases):
+        s = diurnal(rps_peak * amp_scale[p], duration_ms, spec,
+                    seed=seed + p, floor=floors[p], start_rid=offset,
+                    cycles=cycles, phase=phase)
+        for r in s:
+            r.pod = p          # the stream IS this pod's traffic
+        offset += len(s)
+        streams.append(s)
+    merged = [r for s in streams for r in s]
+    merged.sort(key=lambda r: (r.arrive_ms, r.rid))
+    return merged
 
 
 def sessions(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
              seed: int = 0, turns_range: Tuple[int, int] = (2, 6),
              think_ms: float = 1500.0,
              followup_range: Tuple[int, int] = (16, 96),
-             start_rid: int = 0) -> List[Request]:
+             start_rid: int = 0,
+             prefix_groups: int = 0,
+             group_zipf: float = 1.2,
+             sys_prompt_range: Tuple[int, int] = (128, 512)
+             ) -> List[Request]:
     """Multi-turn conversation arrivals at a target *request* rate ``rps``.
 
     Session starts are homogeneous Poisson at ``rps / mean(turns_range)``
@@ -184,13 +234,35 @@ def sessions(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
     KV-shareable tokens) plus a fresh user message from
     ``followup_range``.  ``prefix_id == session_id``: one conversation is
     one prefix group.
+
+    **Shared system-prompt prefix groups** (``prefix_groups > 0``): every
+    session additionally belongs to one of ``prefix_groups`` groups -
+    think product surfaces sharing a system prompt - drawn Zipf-ish
+    (group ``k`` with weight ``(k+1)^-group_zipf``, so group 0 is hot and
+    the tail is cold: realistic cache skew).  The group's system prompt
+    (length from ``sys_prompt_range``, drawn once per group) prefixes the
+    opening prompt, so even a session's *first* turn has
+    ``prefix_len > 0`` and can land warm where its group is cached;
+    ``prefix_id`` is the *group* id for every turn (many sessions, one
+    prefix group - the group's cache entry pools the longest history
+    materialized on that replica).  ``to_trace``/``replay`` round-trip
+    both forms (session, group, and prefix length all ride the 7-column
+    rows).  ``prefix_groups=0`` (default) draws nothing extra and is
+    bit-identical to the historical generator.
     """
     if rps <= 0:
         return []
     rng = np.random.default_rng(seed)
+    grouped = prefix_groups > 0
+    if grouped:
+        # group state up front, so per-session draw order is stable
+        sys_len = [int(rng.integers(*sys_prompt_range))
+                   for _ in range(prefix_groups)]
+        w = np.arange(1, prefix_groups + 1, dtype=np.float64) ** -group_zipf
+        w /= w.sum()
     mean_turns = 0.5 * (turns_range[0] + turns_range[1])
     start_rate_per_ms = rps / mean_turns / 1e3
-    rows = []            # (arrive_ms, session, prompt, gen, prefix_len, pod)
+    rows = []    # (arrive_ms, session, prompt, gen, prefix_id, pfx_len, pod)
     t, sid = 0.0, 0
     while True:
         t += rng.exponential(1.0 / start_rate_per_ms)
@@ -198,21 +270,32 @@ def sessions(rps: float, duration_ms: float, spec: WorkloadSpec = DEFAULT_SPEC,
             break
         n_turns = int(rng.integers(turns_range[0], turns_range[1] + 1))
         pod = int(rng.integers(0, spec.n_pods))
-        at, history = t, 0
+        if grouped:
+            group = int(rng.choice(prefix_groups, p=w))
+            base = sys_len[group]
+        else:
+            group, base = sid, 0
+        at, history = t, base
         for _turn in range(n_turns):
             if at >= duration_ms:
                 break
-            new_toks = (int(rng.integers(*spec.prompt_range)) if history == 0
+            new_toks = (int(rng.integers(*spec.prompt_range))
+                        if history == base
                         else int(rng.integers(*followup_range)))
             gen = int(rng.integers(*spec.gen_range))
-            rows.append((at, sid, history + new_toks, gen, history, pod))
+            # the opening turn's shareable prefix is the group's system
+            # prompt (0 in ungrouped mode); follow-ups share their full
+            # history, system prompt included
+            rows.append((at, sid, history + new_toks, gen, group, history,
+                         pod))
             history += new_toks + gen
             at += rng.exponential(think_ms)
         sid += 1
     rows.sort(key=lambda e: (e[0], e[1]))
     return [Request(rid=start_rid + i, prompt_len=p, gen_len=g, pod=pod,
-                    arrive_ms=a, session_id=s, prefix_id=s, prefix_len=pfx)
-            for i, (a, s, p, g, pfx, pod) in enumerate(rows)]
+                    arrive_ms=a, session_id=s, prefix_id=pid,
+                    prefix_len=pfx)
+            for i, (a, s, p, g, pid, pfx, pod) in enumerate(rows)]
 
 
 def to_trace(requests: Sequence[Request]) -> List[Tuple]:

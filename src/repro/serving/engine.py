@@ -361,6 +361,10 @@ class SimServeEngine:
             "cache_tokens": pc.tokens if pc else 0,
             "cache_hit_tokens": pc.hit_tokens if pc else 0,
             "cache_query_tokens": pc.query_tokens if pc else 0,
+            # eviction pressure: cumulative warm tokens this replica has
+            # churned out - published for cache-health telemetry (victim
+            # selection today reads only cache_tokens occupancy)
+            "cache_evicted_tokens": pc.evicted_tokens if pc else 0,
         }
 
     def drain(self) -> tuple:

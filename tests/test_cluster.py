@@ -9,13 +9,14 @@ import dataclasses
 
 import pytest
 
-from repro.cluster import (SLO, Fleet, FleetConfig, ClusterTelemetry,
-                           PlacementGuard, QueueDepthAutoscaler,
-                           ScaleDecision, SignalBus, SLOAutoscaler,
-                           WorkloadSpec, bursty, diurnal, est_capacity_rps,
-                           guarded_case, knee_cost, make_router,
-                           make_workload, percentile, poisson, replay,
-                           run_fleet, sessions, to_trace, uniform)
+from repro.cluster import (SLO, Fleet, FleetConfig, FleetTopology,
+                           ClusterTelemetry, PlacementGuard,
+                           QueueDepthAutoscaler, ScaleDecision, SignalBus,
+                           SLOAutoscaler, WorkloadSpec, bursty, diurnal,
+                           est_capacity_rps, guarded_case, knee_cost,
+                           make_router, make_workload, percentile,
+                           pod_skewed_diurnal, poisson, replay, run_fleet,
+                           select_victim, sessions, to_trace, uniform)
 from repro.cluster.router import ROUTERS
 from repro.serving.engine import (PrefixCache, Request, SimServeEngine,
                                   StepCostModel, make_admission)
@@ -143,6 +144,112 @@ def test_uniform_matches_legacy_serving_bench_draws():
     new = uniform(50, 500.0, spec, seed=3)
     assert legacy == [(r.prompt_len, r.gen_len, r.pod, r.arrive_ms)
                       for r in new]
+
+
+def test_sessions_shared_prefix_groups():
+    """prefix_groups > 0: every session belongs to one of G groups with a
+    Zipf-skewed draw, prefix_id is the GROUP (shared by many sessions),
+    the opening turn is already warm by the group's system prompt, and
+    to_trace/replay round-trips the grouped form.  prefix_groups=0 draws
+    nothing extra - the legacy generator, request for request."""
+    G = 6
+    reqs = sessions(400.0, 8_000.0, SPEC, seed=9, prefix_groups=G,
+                    group_zipf=1.2)
+    assert reqs == sessions(400.0, 8_000.0, SPEC, seed=9, prefix_groups=G,
+                            group_zipf=1.2)
+    assert replay(to_trace(reqs)) == reqs
+    by_sess = {}
+    for r in reqs:
+        assert 0 <= r.prefix_id < G
+        by_sess.setdefault(r.session_id, []).append(r)
+    # many sessions, one prefix_id
+    by_group = {}
+    for turns in by_sess.values():
+        by_group.setdefault(turns[0].prefix_id, set()).add(
+            turns[0].session_id)
+        # one session, one group; opening turn warm by the system prompt
+        assert len({t.prefix_id for t in turns}) == 1
+        sys_len = turns[0].prefix_len
+        assert sys_len > 0
+        assert turns[0].prompt_len > sys_len
+        for prev, cur in zip(turns, turns[1:]):
+            # history chains on top of the shared system prompt
+            assert cur.prefix_len == prev.prompt_len + prev.gen_len
+            assert cur.prompt_len > cur.prefix_len
+    assert max(len(s) for s in by_group.values()) > 1
+    # Zipf skew: group 0 is drawn materially more often than the tail
+    sizes = [len(by_group.get(g, ())) for g in range(G)]
+    assert sizes[0] > 2 * max(1, sizes[-1])
+    # all sessions in a group share ONE system prompt length
+    sys_lens = {}
+    for turns in by_sess.values():
+        g = turns[0].prefix_id
+        sys_lens.setdefault(g, set()).add(turns[0].prefix_len)
+    assert all(len(v) == 1 for v in sys_lens.values())
+    # default path: ungrouped identity unchanged
+    plain = sessions(400.0, 8_000.0, SPEC, seed=9)
+    assert all(r.prefix_id == r.session_id for r in plain)
+    assert all(t[0].prefix_len == 0 for t in _by_session(plain).values())
+
+
+def _by_session(reqs):
+    out = {}
+    for r in reqs:
+        out.setdefault(r.session_id, []).append(r)
+    return out
+
+
+def test_diurnal_cycles_and_phase():
+    """cycles repeats the daily curve, phase shifts it; the defaults
+    evaluate the exact historical expression (bit-identical stream)."""
+    legacy = diurnal(400.0, 60_000.0, SPEC, seed=2, floor=0.1)
+    assert diurnal(400.0, 60_000.0, SPEC, seed=2, floor=0.1, cycles=1,
+                   phase=0.0) == legacy
+    multi = diurnal(400.0, 60_000.0, SPEC, seed=2, floor=0.05, cycles=3)
+    bins = [0] * 12
+    for r in multi:
+        bins[min(11, int(r.arrive_ms / 5_000.0))] += 1
+    # three humps: the mid-bin of each cycle beats that cycle's edges
+    for c in range(3):
+        lo, mid, hi = bins[4 * c], max(bins[4 * c + 1], bins[4 * c + 2]), \
+            bins[4 * c + 3]
+        assert mid > 1.5 * max(lo, hi, 1)
+    # a half-cycle phase shift moves the peak to the window edges
+    shifted = diurnal(400.0, 60_000.0, SPEC, seed=2, floor=0.05, phase=0.5)
+    sbins = [0] * 10
+    for r in shifted:
+        sbins[min(9, int(r.arrive_ms / 6_000.0))] += 1
+    assert max(sbins[0], sbins[-1]) > 2 * max(sbins[4], sbins[5], 1)
+
+
+def test_pod_skewed_diurnal_structure():
+    """Per-pod streams: forced pods, unique rids, merged arrival order,
+    and the amp/floor skew actually lands per pod."""
+    reqs = pod_skewed_diurnal(300.0, 10_000.0, SPEC, seed=4, cycles=2,
+                              phases=(0.0, 0.25), amp_scale=(0.2, 1.0),
+                              floors=(1.0, 0.05))
+    assert reqs == pod_skewed_diurnal(300.0, 10_000.0, SPEC, seed=4,
+                                      cycles=2, phases=(0.0, 0.25),
+                                      amp_scale=(0.2, 1.0),
+                                      floors=(1.0, 0.05))
+    assert len({r.rid for r in reqs}) == len(reqs)
+    assert [r.arrive_ms for r in reqs] == sorted(r.arrive_ms for r in reqs)
+    n0 = sum(1 for r in reqs if r.pod == 0)
+    n1 = len(reqs) - n0
+    assert n0 > 0 and n1 > 0
+    # pod 0 is flat at 0.2x; pod 1 swings to 1.0x with mean ~0.5x
+    assert n1 > 1.5 * n0
+    # pod 1's arrivals are bursty in time (diurnal), pod 0's are not:
+    # compare each pod's busiest 1s bin against its own mean rate
+    for pod, swing in ((0, False), (1, True)):
+        bins = [0] * 10
+        cnt = 0
+        for r in reqs:
+            if r.pod == pod:
+                bins[min(9, int(r.arrive_ms / 1_000.0))] += 1
+                cnt += 1
+        ratio = max(bins) / max(1.0, cnt / 10.0)
+        assert (ratio > 1.8) == swing, (pod, ratio)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +539,278 @@ def test_slo_autoscaler_deterministic():
 
 
 # ---------------------------------------------------------------------------
+# topology: the shared replica<->pod partition
+# ---------------------------------------------------------------------------
+
+
+def test_topology_partition_and_assignment():
+    topo = FleetTopology(2)
+    # default: the legacy static rule
+    assert [topo.pod_of(i) for i in range(5)] == [0, 1, 0, 1, 0]
+    assert topo.partition(range(5)) == [[0, 2, 4], [1, 3]]
+    # explicit assignment wins (pod-targeted spawn)
+    assert topo.assign(4, 1) == 1
+    assert topo.pod_of(4) == 1
+    assert topo.partition(range(5)) == [[0, 2], [1, 3, 4]]
+    # assign(None) records nothing - static rule stands
+    assert topo.assign(5) == 1
+    assert topo.pod_of(5) == 1
+    # begin_run drops run-recorded assignments (run-scoped state)...
+    topo.begin_run()
+    assert topo.pod_of(4) == 0
+    # pods wrap
+    assert topo.assign(7, 5) == 1
+    # ...but a construction-time partition survives begin_run
+    custom = FleetTopology(2, assignment={0: 1, 1: 0})
+    assert custom.pod_of(0) == 1 and custom.pod_of(1) == 0
+    custom.assign(2, 1)
+    custom.begin_run()
+    assert custom.pod_of(0) == 1 and custom.pod_of(1) == 0
+    assert custom.pod_of(2) == 0       # the spawn record was dropped
+
+
+def test_out_of_range_request_pods_stay_in_rollups():
+    """Requests whose pod exceeds the fleet partition are routed modulo
+    n_pods - the arrival counters and per-pod telemetry must bucket them
+    the same way, so nothing vanishes from the rollups."""
+    spec4 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=4)
+    reqs = poisson(SAT_RPS, 800.0, spec4, seed=3)
+    assert any(r.pod >= 2 for r in reqs)
+    res = run_fleet(reqs, "gcr_aware", _cfg(), max_ms=60_000.0)
+    assert sum(d["arrivals"] for d in res.per_pod) == res.offered
+    assert sum(d["completed"] for d in res.per_pod) == res.completed
+    assert [d["pod"] for d in res.per_pod] == [0, 1]
+
+
+def test_router_partition_follows_topology():
+    """gcr_aware's pod partition reads the shared topology, so a
+    pod-targeted spawn is visible to routing without any router-side
+    bookkeeping."""
+    topo = FleetTopology(2)
+    router = make_router("gcr_aware", n_pods=2, topology=topo)
+    assert router.topology is topo
+    cfg = _cfg(n_replicas=3)
+    bus = SignalBus()
+    engines = cfg.make_engines()
+    for eng in engines:
+        bus.register(eng, 0.0)
+    views = list(bus.views)
+    # statically, replica 2 serves pod 0
+    grp0 = router._partition(0, views)
+    assert [v.idx for v in grp0] == [0, 2]
+    # an explicit assignment moves it to pod 1 (fresh view list = the
+    # fleet's rebuild-on-scaling contract)
+    topo.assign(2, 1)
+    views2 = list(views)
+    assert [v.idx for v in router._partition(1, views2)] == [1, 2]
+    assert [v.idx for v in router._partition(0, views2)] == [0]
+
+
+def test_pod_views_roll_up_the_bus():
+    """PodView sums the last PUBLISHED reports per pod (stale under a
+    periodic bus) while per-pod arrivals stay LB-fresh."""
+    topo = FleetTopology(2)
+    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=LIMIT,
+                      n_pods=2, cost=COST, prefix_cache_tokens=10_000)
+    stale = SignalBus(period_ms=100.0)
+    engines = [cfg.make_engine(i) for i in range(2)]
+    for eng in engines:
+        stale.register(eng, 0.0)
+    engines[0].submit(Request(rid=0, prompt_len=32, gen_len=4, pod=0,
+                              prefix_id=1, prefix_len=16))
+    stale.pod_arrivals[0] = 1
+    pv = stale.pod_views(topo, [0, 1], 50.0)
+    assert [v.pod for v in pv] == [0, 1]
+    # occupancy is the t=0 cold report (stale), arrivals are fresh
+    assert pv[0].num_active == 0
+    assert pv[0].arrivals == 1
+    assert pv[0].capacity == LIMIT and not pv[0].unlimited
+    assert pv[0].replicas == (0,) and pv[1].replicas == (1,)
+    stale.publish(0, 100.0)
+    pv2 = stale.pod_views(topo, [0, 1], 100.0)
+    assert pv2[0].num_active == 1
+    assert pv2[0].outstanding == 1
+    # live bus: rollups are omniscient, like every other consumer
+    live = SignalBus(period_ms=0.0)
+    for eng in engines:
+        live.register(eng, 0.0)
+    lv = live.pod_views(topo, [0, 1], 0.0)
+    assert lv[0].num_active == 1
+    # retired replicas keep cumulative counters but leave the gauges
+    lv_dead = live.pod_views(topo, [1], 0.0)
+    assert lv_dead[0].num_active == 0 and lv_dead[0].replicas == ()
+    assert lv_dead[0].completed == 0    # cumulative history retained
+
+
+def test_pod_targeted_spawn_lands_in_pod():
+    """ScaleDecision(pod=p) spawns a replica the topology files under p;
+    pod-affine routing then feeds it p's traffic (and conservation
+    holds through the pod-targeted churn)."""
+    reqs = poisson(2 * SAT_RPS, 1200.0, SPEC, seed=6)
+    cfg = _cfg(n_replicas=2)
+    topo = FleetTopology(2)
+    state = {"n": 0}
+
+    def scaler(fleet, now_ms):
+        state["n"] += 1
+        if state["n"] == 1:
+            return ScaleDecision(add=cfg.make_engine(), pod=1,
+                                 reason="forced pod spawn")
+        return None
+
+    router = make_router("gcr_aware", n_pods=2, topology=topo)
+    fleet = Fleet(cfg.make_engines(), router, ClusterTelemetry(SLO()),
+                  autoscaler=scaler, autoscale_every_ms=200.0,
+                  topology=topo)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    # statically idx 2 would serve pod 0; the decision put it in pod 1
+    assert fleet.topology.pod_of(2) == 1
+    assert res.per_replica[2]["pod"] == 1
+    assert res.per_replica[2]["tokens"] > 0
+    # every request replica 2 served was pod-1 traffic (pod-pure router)
+    assert all(r.pod == 1 for r in fleet.replicas[2].requests.values())
+    live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
+    assert res.completed + live + res.stats["migrating_end"] == res.offered
+    # per-pod telemetry rode along
+    assert [d["pod"] for d in res.per_pod] == [0, 1]
+    assert sum(d["arrivals"] for d in res.per_pod) == res.offered
+
+
+def test_select_victim_policies():
+    from repro.cluster import ReplicaReport
+
+    def rep(outstanding, cache):
+        return ReplicaReport(t_ms=0.0, num_active=outstanding,
+                             num_parked=0, active_limit=32,
+                             outstanding=outstanding, tokens_out=0,
+                             completed=0, slo_met=0, cache_tokens=cache)
+
+    live = [3, 5, 9]
+    reports = [rep(4, 900), rep(1, 500), rep(2, 100)]
+    assert select_victim("least_outstanding", reports, live) == 1
+    assert select_victim("coldest_cache", reports, live) == 2
+    # ties break by outstanding then lowest replica idx
+    reports = [rep(2, 100), rep(1, 100), rep(1, 100)]
+    assert select_victim("coldest_cache", reports, live) == 1
+    with pytest.raises(ValueError):
+        select_victim("warmest", reports, live)
+    with pytest.raises(ValueError):
+        SLOAutoscaler(_cfg(), victim="warmest")
+
+
+def test_slo_autoscaler_coldest_cache_retires_cold_replica():
+    """Integration: a draining fleet with one warm and one cold cache -
+    victim='coldest_cache' retires the cold replica where the default
+    retires by outstanding count."""
+    spec1 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=1)
+    cost = dataclasses.replace(knee_cost(spec1, LIMIT, oversub=2.0),
+                               t_prefill_ms_per_tok=0.05)
+    cfg = FleetConfig(n_replicas=3, admission="gcr", active_limit=LIMIT,
+                      n_pods=1, cost=cost, prefix_cache_tokens=100_000)
+    # light load so the pool drains and scale-in conditions hold
+    reqs = sessions(0.3 * SAT_RPS, 2_000.0, spec1, seed=3,
+                    prefix_groups=4, group_zipf=1.3)
+
+    def go(victim):
+        scaler = SLOAutoscaler(cfg, max_replicas=3, min_replicas=2,
+                               cooldown_in_ms=400.0, scale_in_util=0.95,
+                               victim=victim)
+        fleet = Fleet(cfg.make_engines(),
+                      make_router("affinity", n_pods=1),
+                      ClusterTelemetry(SLO()), autoscaler=scaler,
+                      autoscale_every_ms=200.0)
+        res = fleet.run(reqs, max_ms=60_000.0)
+        retired = [i for i, gone in enumerate(fleet.retired) if gone]
+        return fleet, res, retired
+
+    _fleet_a, res_a, retired_a = go("least_outstanding")
+    _fleet_b, res_b, retired_b = go("coldest_cache")
+    assert len(retired_a) == len(retired_b) == 1
+    # identical drain schedule, different victim policy: the coldest-
+    # cache kill accounts no more warm loss than the default's
+    assert res_b.stats["prefix_tokens_lost"] \
+        <= res_a.stats["prefix_tokens_lost"]
+    for res in (res_a, res_b):
+        live = sum(r["active_end"] + r["parked_end"]
+                   for r in res.per_replica)
+        assert res.completed + live + res.stats["migrating_end"] \
+            == res.offered
+
+
+def test_pod_scoped_scaler_targets_burning_pod():
+    """Skewed 2-pod load: the pod-scoped controller's first scale-out is
+    pod-assigned to the saturated pod, and the spawned replica serves
+    it; the pool-scalar controller on the same trace spawns by index
+    parity into the idle pod."""
+    spec2 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=2)
+    cap1 = est_capacity_rps(spec2, LIMIT, 1, COST)
+    # all swing in pod 1, steady trickle in pod 0
+    reqs = pod_skewed_diurnal(3.0 * cap1, 6_000.0, spec2, seed=5,
+                              cycles=1, phases=(0.0, 0.25),
+                              amp_scale=(0.1, 1.0), floors=(1.0, 0.1))
+    cfg = FleetConfig(n_replicas=2, admission="gcr_pod",
+                      active_limit=LIMIT, n_pods=2, cost=COST)
+
+    def go(pod_scoped):
+        return run_fleet(reqs, "gcr_aware", cfg, max_ms=120_000.0,
+                         autoscale="slo", max_replicas=4,
+                         pod_scoped=pod_scoped, router_seed=1)
+
+    pod = go(True)
+    assert pod.stats["scale_events"] > 0
+    spawned = [i for i, d in enumerate(pod.per_replica) if i >= 2]
+    assert spawned and all(pod.per_replica[i]["pod"] == 1 for i in spawned)
+    scalar = go(False)
+    if len(scalar.per_replica) > 2:
+        # parity places the scalar's first spawn (idx 2) in pod 0
+        assert scalar.per_replica[2]["pod"] == 0
+    for res in (pod, scalar):
+        live = sum(r["active_end"] + r["parked_end"]
+                   for r in res.per_replica)
+        assert res.completed + live + res.stats["migrating_end"] \
+            == res.offered
+    # determinism through the pod-scoped path
+    again = go(True)
+    assert dataclasses.asdict(pod) == dataclasses.asdict(again)
+
+
+def test_seasonal_predictive_ab():
+    """Deterministic A/B on a 3-cycle diurnal trace: the seasonal fit
+    anticipates each trough and ramp, holding the linear trend's
+    attainment while billing materially fewer replica-ms.  On a window
+    shorter than 1.25 periods the seasonal fit cannot identify a phase
+    and the controller is bit-identical to the linear trend."""
+    spec2 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=2)
+    cap1 = est_capacity_rps(spec2, LIMIT, 1, COST)
+    T, cycles = 24_000.0, 3
+    reqs = diurnal(3.0 * cap1, T, spec2, seed=7, floor=0.1, cycles=cycles)
+    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=LIMIT,
+                      n_pods=2, cost=COST)
+
+    def go(season, workload=reqs):
+        return run_fleet(workload, "gcr_aware", cfg, max_ms=240_000.0,
+                         autoscale="predictive", max_replicas=6,
+                         rps_per_replica=cap1, season_period_ms=season,
+                         router_seed=1)
+
+    linear = go(None)
+    seasonal = go(T / cycles)
+    assert seasonal.slo_attainment >= linear.slo_attainment - 1e-9
+    assert seasonal.stats["replica_ms"] < 0.9 * linear.stats["replica_ms"], \
+        (f"seasonal billed {seasonal.stats['replica_ms']:.0f} vs linear "
+         f"{linear.stats['replica_ms']:.0f}")
+    assert dataclasses.asdict(seasonal) == dataclasses.asdict(go(T / cycles))
+    # short window: seasonal falls back to the linear trend, bit for bit
+    short = diurnal(3.0 * cap1, 6_000.0, spec2, seed=7, floor=0.1)
+    assert dataclasses.asdict(go(8_000.0, short)) \
+        == dataclasses.asdict(go(None, short))
+
+
+# ---------------------------------------------------------------------------
 # heterogeneous pools
 # ---------------------------------------------------------------------------
 
@@ -686,6 +1065,25 @@ def test_invariants_under_scripted_scaling(router_name):
                  max_ms=900.0)
     guarded_case(3, "bursty", router_name,
                  schedule=(("in", 2), ("out", 0)), max_ms=60_000.0)
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_invariants_under_pod_scoped_scaling(router_name):
+    """The same invariants through POD-TARGETED spawn/retire: replicas
+    placed into explicit pods mid-run, pod-scoped retirement, and a
+    cutoff landing mid-migration - every router must keep placing on
+    live replicas and conserve every stream."""
+    guarded_case(7, "sessions", router_name,
+                 schedule=(("out_pod", 1), ("out_pod", 1), ("in_pod", 0),
+                           ("in_pod", 1)),
+                 max_ms=900.0)
+    guarded_case(5, "poisson", router_name,
+                 schedule=(("out_pod", 0), ("in_pod", 1), ("out_pod", 1)),
+                 max_ms=60_000.0)
+    # mid-migration truncation with pod-scoped churn under staleness
+    guarded_case(11, "bursty", router_name,
+                 schedule=(("in_pod", 1), ("out_pod", 1)),
+                 staleness_ms=80.0, max_ms=700.0)
 
 
 def test_invariants_under_staleness_grid():
@@ -1007,8 +1405,9 @@ def test_perf_guard_check_math(tmp_path, monkeypatch):
     monkeypatch.setattr(perf_guard, "BASELINE_PATH", base)
     # no baseline => fail loudly, not silently pass
     assert perf_guard.check(1.5) == 1
-    # within budget (same speed)
+    # a LEGACY single-entry file reads as a one-entry history (stamp 1)
     base.write_text(json.dumps(fake_measure()))
+    assert [e["stamp"] for e in perf_guard.load_history(base)] == [1]
     assert perf_guard.check(1.5) == 0
     # baseline 2x faster than current => regression at factor 1.5
     twice = fake_measure()
@@ -1017,3 +1416,46 @@ def test_perf_guard_check_math(tmp_path, monkeypatch):
     assert perf_guard.check(1.5) == 1
     # ...but tolerated at factor 3
     assert perf_guard.check(3.0) == 0
+
+
+def test_perf_guard_history_appends_and_checks_latest(tmp_path,
+                                                      monkeypatch):
+    """--write APPENDS stamped entries (history immutable, stamps
+    monotone); --check gates against the LATEST entry only; structural
+    corruption (reordered stamps) fails loudly."""
+    import json
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks import perf_guard
+
+    speeds = {"norm": 10.0}
+
+    def fake_measure():
+        return {"calib_s": 0.1, "suites": {
+            "a": {"wall_s": 1.0, "events": 100, "events_per_s": 100.0,
+                  "norm_events_per_calib": speeds["norm"]}}}
+
+    monkeypatch.setattr(perf_guard, "measure", fake_measure)
+    base = tmp_path / "BENCH_cluster.json"
+    monkeypatch.setattr(perf_guard, "BASELINE_PATH", base)
+    e1 = perf_guard.append_entry("PR1")
+    speeds["norm"] = 20.0           # this build is 2x faster
+    e2 = perf_guard.append_entry("PR2")
+    assert (e1["stamp"], e2["stamp"]) == (1, 2)
+    hist = perf_guard.load_history(base)
+    assert [e["label"] for e in hist] == ["PR1", "PR2"]
+    # the earlier entry is untouched by the append
+    assert hist[0]["suites"]["a"]["norm_events_per_calib"] == 10.0
+    # check compares to the LATEST (20.0): a 10.0 build is a 2x regress
+    speeds["norm"] = 10.0
+    assert perf_guard.check(1.5) == 1
+    # against history[0] it would have passed - latest governs
+    speeds["norm"] = 20.0
+    assert perf_guard.check(1.5) == 0
+    # corrupt (non-monotone) history is rejected by check and by append
+    hist_bad = {"history": [dict(hist[1]), dict(hist[0])]}
+    base.write_text(json.dumps(hist_bad))
+    assert perf_guard.check(1.5) == 1
+    with pytest.raises(SystemExit):
+        perf_guard.append_entry("PR3")

@@ -159,7 +159,8 @@ def test_moe_capacity_and_rotation(seed, off):
 # ---------------------------------------------------------------------------
 
 _schedules = st.lists(
-    st.tuples(st.sampled_from(["out", "in", "none"]), st.integers(0, 3)),
+    st.tuples(st.sampled_from(["out", "in", "out_pod", "in_pod", "none"]),
+              st.integers(0, 3)),
     min_size=0, max_size=6)
 
 
@@ -281,6 +282,31 @@ def test_session_trace_replay_roundtrip(seed, n):
                         n_pods=2)
     reqs = sessions(float(10 * n), 900.0, spec, seed=seed)
     assert replay(to_trace(reqs)) == reqs
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), groups=st.integers(1, 12),
+       zipf=st.floats(0.5, 2.0))
+def test_shared_prefix_group_sessions_fuzzed(seed, groups, zipf):
+    """Grouped sessions: prefix_id is a valid group for every turn, one
+    group and one system-prompt length per session, history chains on
+    top of the shared prefix, and the trace round-trips."""
+    from repro.cluster import WorkloadSpec, replay, sessions, to_trace
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    reqs = sessions(250.0, 900.0, spec, seed=seed, prefix_groups=groups,
+                    group_zipf=zipf)
+    assert replay(to_trace(reqs)) == reqs
+    by_sess = {}
+    for r in reqs:
+        assert 0 <= r.prefix_id < groups
+        by_sess.setdefault(r.session_id, []).append(r)
+    for turns in by_sess.values():
+        assert len({t.prefix_id for t in turns}) == 1
+        assert turns[0].prefix_len > 0
+        assert turns[0].prompt_len > turns[0].prefix_len
+        for prev, cur in zip(turns, turns[1:]):
+            assert cur.prefix_len == prev.prompt_len + prev.gen_len
 
 
 # ---------------------------------------------------------------------------
