@@ -55,15 +55,17 @@ Usage:  PYTHONPATH=src python benchmarks/cluster_bench.py [--smoke] [--jobs N]
 from __future__ import annotations
 
 import argparse
+import json
 from typing import List, Optional, Tuple
 
 import dataclasses
 
 from repro.cluster import (FleetConfig, ScaleDecision, SLOAutoscaler,
                            WorkloadSpec, assert_conserved, conserved_count,
-                           est_capacity_rps, knee_cost, make_workload,
-                           pod_skewed_diurnal, run_fleet, select_victim,
-                           sessions)
+                           detect_collapse_onset, est_capacity_rps,
+                           knee_cost, make_workload, pod_skewed_diurnal,
+                           run_fleet, select_victim, sessions)
+from repro.cluster.obs import WINDOW_SCHEMA
 
 try:                                    # python -m benchmarks.run / pytest
     from benchmarks.scale_bench import GridPoint, run_grid
@@ -179,6 +181,132 @@ def cluster_collapse(smoke: bool = False,
                  ""))
     rows.append(("cluster/autoscale/replicas_end",
                  float(len(scaled.per_replica)), ""))
+    return rows
+
+
+ONSET_WINDOW_MS = 250.0
+
+
+def collapse_onset(smoke: bool = False, jobs: Optional[int] = None,
+                   sink: Optional[dict] = None) -> List[Row]:
+    """Time-resolved collapse: the flight recorder's windowed view of the
+    headline claim, plus control-plane decision fidelity.
+
+    Re-runs the collapse scenario's corner cells with the observability
+    layer's windowed metrics on (250 ms virtual-time windows) and asserts
+    the claim in the TIME domain via ``detect_collapse_onset``: the blind
+    baseline (round_robin/none) at 2x saturation shows an onset window -
+    a loaded window whose goodput has fallen >= 50% below the loaded-peak
+    while offered load holds - while the same baseline below saturation
+    and gcr_aware/gcr at BOTH loads show none.  Collapse is a thing that
+    happens at a *moment*, not just a point on a throughput curve.
+
+    Then a seeded SLO-autoscaled run with the flight recorder on must
+    reproduce every ``ScaleDecision`` the controller actually took, tick
+    for tick (same virtual time, action, pod, victim, reason, and
+    removed replica), each with a non-empty staleness-stamped bus
+    snapshot - the recorder is trustworthy evidence of what the control
+    plane did and what (stale) state it saw.
+    """
+    if smoke:
+        n_replicas, limit, duration_ms, max_ms = 2, 32, 2_000.0, 30_000.0
+        spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                            n_pods=N_PODS)
+    else:
+        n_replicas, limit, duration_ms, max_ms = 4, 96, 4_000.0, 90_000.0
+        spec = WorkloadSpec(n_pods=N_PODS)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+
+    cells = [(rname, adm, mult)
+             for mult in (0.5, 2.0)
+             for rname, adm in (("round_robin", "none"),
+                                ("gcr_aware", "gcr"))]
+    out = run_grid([GridPoint(tag=f"onset/{r}/{a}/x{m:g}",
+                              workload="poisson", rps=cap * m,
+                              duration_ms=duration_ms, seed=SEED,
+                              router=r, admission=a, n_replicas=n_replicas,
+                              active_limit=limit, n_pods=N_PODS,
+                              prompt_range=spec.prompt_range,
+                              gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                              max_ms=max_ms, router_seed=1,
+                              window_ms=ONSET_WINDOW_MS)
+                    for r, a, m in cells], jobs)
+
+    rows: List[Row] = []
+    for (rname, adm, mult), res in zip(cells, out):
+        tag = f"{rname}/{adm}/x{mult:g}"
+        assert_conserved(res, f"onset/{tag}")
+        # windowed rollup conserves the run totals
+        assert sum(int(w["arrivals"]) for w in res.windows) == res.offered
+        assert sum(int(w["completed"]) for w in res.windows) \
+            == res.completed
+        onset = detect_collapse_onset(res.windows)
+        rows.append((f"cluster/onset/{tag}_window",
+                     float(-1 if onset is None else onset["window"]), ""))
+        if onset is not None:
+            rows.append((f"cluster/onset/{tag}_t_ms", onset["t_ms"], ""))
+            rows.append((f"cluster/onset/{tag}_peak_tok_s",
+                         onset["peak_tok_s"], ""))
+            rows.append((f"cluster/onset/{tag}_goodput_tok_s",
+                         onset["goodput_tok_s"], ""))
+        if sink is not None:
+            sink.setdefault("windows", {})[tag] = res.windows
+            sink.setdefault("onset", {})[tag] = onset
+            sink.setdefault("results", {})[tag] = dataclasses.asdict(res)
+        want = rname == "round_robin" and mult >= 2.0
+        if want:
+            assert onset is not None, \
+                f"blind {tag}: no collapse onset found past saturation"
+            assert onset["t_ms"] <= duration_ms, \
+                (f"blind {tag}: onset at {onset['t_ms']:.0f}ms, after "
+                 f"offered load stopped at {duration_ms:.0f}ms")
+        else:
+            assert onset is None, \
+                (f"{tag}: spurious collapse onset in window "
+                 f"{onset['window']} at {onset['t_ms']:.0f}ms")
+
+    # --- flight recorder reproduces the autoscaler's decisions ---------
+    from repro.cluster import Observability
+    limit2 = 32
+    spec2 = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                         n_pods=N_PODS)
+    cost2 = knee_cost(spec2, limit2, oversub=HBM_OVERSUB)
+    cap0 = est_capacity_rps(spec2, limit2, 2, cost2)
+    cfg2 = FleetConfig(n_replicas=2, admission="gcr", active_limit=limit2,
+                       n_pods=N_PODS, cost=cost2)
+    reqs = make_workload("diurnal", 2.5 * cap0, 16_000.0, spec2, SEED)
+    inner = SLOAutoscaler(cfg2, max_replicas=6, predictive=True,
+                          rps_per_replica=cap0 / 2, cooldown_in_ms=800.0,
+                          scale_in_util=0.8, lead_ms=4000.0)
+    truth: List[Tuple[float, ScaleDecision]] = []
+
+    def recording(fleet, now_ms):
+        d = inner(fleet, now_ms)
+        if d is not None and (d.add is not None or d.remove is not None):
+            truth.append((now_ms, d))
+        return d
+
+    obs = Observability(spans=False, flight=True)
+    res = run_fleet(reqs, "gcr_aware", cfg2, max_ms=120_000.0,
+                    autoscale=recording, max_replicas=6, obs=obs)
+    assert_conserved(res, "onset/flight")
+    got = obs.recorder.decisions()
+    assert truth, "autoscaled run took no scale decisions to reproduce"
+    assert len(got) == len(truth), \
+        f"flight recorder logged {len(got)} decisions, took {len(truth)}"
+    for g, (t, d) in zip(got, truth):
+        assert g["t_ms"] == t
+        assert g["action"] == ("add" if d.add is not None else "remove")
+        assert g["pod"] == d.pod and g["victim"] == d.victim
+        assert g["reason"] == d.reason and g["remove"] == d.remove
+        assert g["snapshot"], "scale tick recorded without a bus snapshot"
+        assert all(s["staleness_ms"] >= 0.0 for s in g["snapshot"])
+    rows.append(("cluster/onset/flight_decisions", float(len(got)), ""))
+    rows.append(("cluster/onset/flight_scale_out",
+                 res.stats["scale_events"], ""))
+    rows.append(("cluster/onset/flight_scale_in",
+                 res.stats["scale_in_events"], ""))
     return rows
 
 
@@ -579,11 +707,27 @@ def main() -> None:
     ap.add_argument("--jobs", type=int, default=None,
                     help="process-pool width for the sweep grids "
                          "(default: CPU count)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write machine-readable results: the CSV "
+                         "rows plus the collapse-onset window series "
+                         "(obs.WINDOW_SCHEMA keys) and full per-cell "
+                         "ClusterResult dumps")
     args = ap.parse_args()
+    sink: dict = {}
+    rows = (cluster_collapse(args.smoke, args.jobs)
+            + collapse_onset(args.smoke, args.jobs, sink)
+            + control_plane(args.smoke, args.jobs))
     print("name,value,derived")
-    for name, val, derived in (cluster_collapse(args.smoke, args.jobs)
-                               + control_plane(args.smoke, args.jobs)):
+    for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
+    if args.json:
+        sink["schema"] = WINDOW_SCHEMA
+        sink["window_ms"] = ONSET_WINDOW_MS
+        sink["rows"] = [{"name": n, "value": v, "derived": d}
+                        for n, v, d in rows]
+        with open(args.json, "w") as fh:
+            json.dump(sink, fh, indent=2, sort_keys=True)
+        print(f"# json -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -195,6 +195,53 @@ def fig_cluster_collapse() -> List[Row]:
     return rows
 
 
+def fig_obs_collapse() -> List[Row]:
+    """The collapse as a TIME SERIES (the observability layer's figure):
+    per-window fleet goodput at 2x saturation for occupancy-blind routing
+    over unrestricted replicas vs GCR-aware routing over GCR replicas,
+    with the detected collapse-onset window marked.  The load-curve
+    figures show that collapse happened; this one shows WHEN - the blind
+    fleet's goodput falls off a cliff mid-offered-window while arrivals
+    hold, and the restricted fleet's series stays flat."""
+    from repro.cluster import (FleetConfig, Observability, WorkloadSpec,
+                               detect_collapse_onset, est_capacity_rps,
+                               knee_cost, make_router, make_workload,
+                               run_fleet)
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    limit, n_replicas, window_ms = 32, 2, 250.0
+    cost = knee_cost(spec, limit, oversub=2.0)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    reqs = make_workload("poisson", 2.0 * cap, 2_000.0, spec, seed=7)
+    rows: List[Row] = []
+    onsets = {}
+    for rname, adm in (("round_robin", "none"), ("gcr_aware", "gcr")):
+        cfg = FleetConfig(n_replicas=n_replicas, admission=adm,
+                          active_limit=limit, n_pods=2, cost=cost)
+        obs = Observability(window_ms=window_ms, spans=False, flight=False)
+        run_fleet(reqs, make_router(rname, seed=1, n_pods=2), cfg,
+                  max_ms=60_000.0, obs=obs)
+        onset = detect_collapse_onset(obs.windows)
+        onsets[rname] = onset
+        # the loaded prefix plus a short drain tail; the blind run drains
+        # for hundreds of empty windows that plot as nothing
+        for w in obs.windows:
+            if w["t_start_ms"] >= 3_000.0:
+                break
+            rows.append((f"fig_obs/{rname}/t{w['t_start_ms']:g}_goodput",
+                         w["goodput_tok_s"],
+                         f"arrivals={w['arrivals']:g}"))
+        rows.append((f"fig_obs/{rname}/onset_window",
+                     float(-1 if onset is None else onset["window"]), ""))
+    assert onsets["round_robin"] is not None, \
+        "blind fleet should show a collapse-onset window at 2x saturation"
+    assert onsets["round_robin"]["t_ms"] <= 2_000.0, \
+        "blind onset should land inside the offered-load window"
+    assert onsets["gcr_aware"] is None, \
+        "restricted fleet should show no collapse onset"
+    return rows
+
+
 def fig_cluster_affinity() -> List[Row]:
     """Session-affinity sweep (the L2 locality figure): offered multi-turn
     load from well under to well past fleet saturation, TTFT-p99 and

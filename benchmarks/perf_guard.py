@@ -222,6 +222,37 @@ def verify_append(old_path: pathlib.Path,
     return 0
 
 
+def print_trajectory(history: List[Dict]) -> None:
+    """Per-suite normalized-throughput deltas between consecutive history
+    stamps - the committed perf trajectory, not just the latest gate.  A
+    suite first measured at stamp N shows 'new' for that hop."""
+    if len(history) < 2:
+        print("perf_guard: trajectory has a single entry; no deltas yet")
+        return
+    names: List[str] = []
+    for e in history:
+        for n in e.get("suites", {}):
+            if n not in names:
+                names.append(n)
+    print("perf_guard: trajectory (norm events/calib, % vs prev stamp)")
+    for name in names:
+        hops = []
+        prev = None
+        for e in history:
+            s = e.get("suites", {}).get(name)
+            if s is None:
+                continue
+            cur = s["norm_events_per_calib"]
+            label = f"{e.get('stamp')}:{e.get('label', '')}"
+            if prev is None:
+                hops.append(f"{label} new")
+            else:
+                pct = (cur / max(prev, 1e-9) - 1.0) * 100.0
+                hops.append(f"{label} {pct:+.0f}%")
+            prev = cur
+        print(f"  {name:26s} " + " -> ".join(hops))
+
+
 def check(factor: float) -> int:
     if not BASELINE_PATH.exists():
         print(f"perf_guard: no baseline at {BASELINE_PATH}; run --write")
@@ -231,6 +262,7 @@ def check(factor: float) -> int:
     if problems:
         print("perf_guard: corrupt history\n  " + "\n  ".join(problems))
         return 1
+    print_trajectory(history)
     base = history[-1]          # regression gate: latest committed entry
     got = measure()
     failures = []

@@ -41,10 +41,12 @@ def _suites():
         ("leveldb", apps.leveldb_analog),
         ("threads", apps.real_threads_microbench),
         ("fig_cluster", figures.fig_cluster_collapse),
+        ("fig_obs", figures.fig_obs_collapse),
         ("fig_affinity", figures.fig_cluster_affinity),
         ("fig_perf_traj", figures.fig_perf_trajectory),
         ("serving", serving_bench.serving_collapse),
         ("cluster", cluster_bench.cluster_collapse),
+        ("cluster_onset", cluster_bench.collapse_onset),
         ("cluster_ctrl", cluster_bench.control_plane),
         ("scale", scale_bench.scale_sweep),
         ("roofline", roofline.roofline_rows),

@@ -42,9 +42,9 @@ import os
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from repro.cluster import (FleetConfig, SLOAutoscaler, WorkloadSpec,
-                           assert_conserved, est_capacity_rps, knee_cost,
-                           make_workload, run_fleet, sessions)
+from repro.cluster import (FleetConfig, Observability, SLOAutoscaler,
+                           WorkloadSpec, assert_conserved, est_capacity_rps,
+                           knee_cost, make_workload, run_fleet, sessions)
 from repro.cluster.telemetry import ClusterResult
 
 Row = Tuple[str, float, str]
@@ -87,6 +87,10 @@ class GridPoint:
     slo_params: Optional[dict] = None   # custom SLOAutoscaler(**params)
     max_replicas: int = 8
     rps_per_replica: Optional[float] = None
+    window_ms: float = 0.0        # >0: windowed metrics ride back on
+    #                               ClusterResult.windows (obs layer,
+    #                               metrics only - spans/flight stay off
+    #                               so points remain cheap and picklable)
 
     def spec(self) -> WorkloadSpec:
         return WorkloadSpec(prompt_range=self.prompt_range,
@@ -132,12 +136,14 @@ def run_point(pt: GridPoint) -> ClusterResult:
     autoscale = pt.autoscale
     if pt.slo_params is not None:
         autoscale = SLOAutoscaler(cfg, **pt.slo_params)
+    obs = (Observability(window_ms=pt.window_ms, spans=False, flight=False)
+           if pt.window_ms > 0.0 else None)
     return run_fleet(reqs, pt.router, cfg, max_ms=pt.max_ms,
                      staleness_ms=pt.staleness_ms, jitter_ms=pt.jitter_ms,
                      signal_seed=pt.signal_seed, autoscale=autoscale,
                      max_replicas=pt.max_replicas,
                      rps_per_replica=pt.rps_per_replica,
-                     router_seed=pt.router_seed)
+                     router_seed=pt.router_seed, obs=obs)
 
 
 _POOL = None

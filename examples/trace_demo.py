@@ -1,0 +1,107 @@
+"""Flight-recorder demo: watch a fleet collapse in time, then load the
+trace in Perfetto.
+
+Drives one small fleet past its saturation point twice - occupancy-blind
+round-robin over unrestricted replicas vs GCR admission with GCR-aware
+routing - with the full observability bundle attached: request spans,
+the control-plane flight recorder, and 250 ms windowed fleet metrics.
+Prints the time-resolved goodput series with the detected collapse-onset
+window (the blind fleet has one; the restricted fleet does not), then
+writes every stream to --out:
+
+    <out>/<tag>.spans.jsonl    structured span events (JSONL)
+    <out>/<tag>.trace.json     Chrome trace-event JSON - open at
+                               https://ui.perfetto.dev
+    <out>/<tag>.flight.jsonl   control-plane decision log
+    <out>/<tag>.windows.csv    per-window fleet time series
+
+Usage:  PYTHONPATH=src python examples/trace_demo.py [--smoke] [--out DIR]
+"""
+
+import argparse
+import os
+
+from repro.cluster import (FleetConfig, Observability, WorkloadSpec,
+                           est_capacity_rps, knee_cost, make_workload,
+                           run_fleet)
+
+WINDOW_MS = 250.0
+
+
+def run_traced(tag, router, admission, reqs, cfg, out_dir):
+    obs = Observability(window_ms=WINDOW_MS)
+    res = run_fleet(reqs, router, cfg, max_ms=60_000.0, router_seed=1,
+                    obs=obs)
+    print(f"\n== {tag} ({router}/{admission}) ==")
+    print(res.summary())
+
+    bar_max = max((w["goodput_tok_s"] for w in obs.windows), default=1.0)
+    onset = obs.onset()
+    onset_win = None if onset is None else onset["window"]
+    shown = 0
+    for w in obs.windows:
+        if w["arrivals"] == 0 and w["completed"] == 0:
+            continue
+        shown += 1
+        if shown > 24:
+            print("   ... (drain continues)")
+            break
+        bar = "#" * int(40 * w["goodput_tok_s"] / max(bar_max, 1e-9))
+        mark = "  <- collapse onset" if w["window"] == onset_win else ""
+        print(f"  [{w['t_start_ms']:>6,.0f}ms] arr={w['arrivals']:>4} "
+              f"done={w['completed']:>4} goodput={w['goodput_tok_s']:>8,.0f} "
+              f"{bar}{mark}")
+    if onset is None:
+        print("  onset: none - goodput held within 50% of its loaded peak")
+    else:
+        print(f"  onset: window {onset['window']} at "
+              f"{onset['t_ms']:,.0f}ms - goodput "
+              f"{onset['goodput_tok_s']:,.0f} tok/s, down from loaded peak "
+              f"{onset['peak_tok_s']:,.0f} (window {onset['peak_window']})")
+
+    paths = obs.export(os.path.join(out_dir, tag))
+    for stream, path in sorted(paths.items()):
+        print(f"  {stream:>7}: {path}")
+    print(f"  open {paths['trace']} at https://ui.perfetto.dev")
+    return onset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller fleet + shorter offered window (CI)")
+    ap.add_argument("--out", default="traces",
+                    help="output directory (default: ./traces)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.smoke:
+        n_replicas, limit, duration_ms = 2, 32, 2_000.0
+    else:
+        n_replicas, limit, duration_ms = 4, 32, 4_000.0
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=2)
+    cost = knee_cost(spec, limit, oversub=2.0)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    reqs = make_workload("poisson", 2.0 * cap, duration_ms, spec, seed=7)
+    print(f"{len(reqs)} requests at 2x saturation "
+          f"(~{2.0 * cap:,.0f} rps) into {n_replicas} replicas, "
+          f"active_limit={limit}, windows of {WINDOW_MS:g}ms")
+
+    blind = run_traced(
+        "blind", "round_robin", "none", reqs,
+        FleetConfig(n_replicas=n_replicas, admission="none",
+                    active_limit=limit, n_pods=2, cost=cost), args.out)
+    aware = run_traced(
+        "gcr_aware", "gcr_aware", "gcr", reqs,
+        FleetConfig(n_replicas=n_replicas, admission="gcr",
+                    active_limit=limit, n_pods=2, cost=cost), args.out)
+
+    assert blind is not None, "blind fleet should collapse past saturation"
+    assert aware is None, "restricted fleet should hold its goodput"
+    print("\ncollapse onset found for the blind fleet only - restricting "
+          "concurrency is what removes it.")
+
+
+if __name__ == "__main__":
+    main()

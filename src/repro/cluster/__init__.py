@@ -8,16 +8,22 @@ circulating through a *fleet* of replicas: open-loop workloads
 pluggable routing with a capacity-aware GCR-occupancy policy
 (``router``), SLO-driven autoscaling with KV-migration scale-in
 (``controller``), a shared-clock event loop (``fleet``), and SLO
-telemetry (``telemetry``).
+telemetry (``telemetry``), and an opt-in observability layer - request
+spans, control-plane flight recorder, windowed time series, collapse
+onset detection (``obs``).
 """
 
 from .controller import (VICTIM_POLICIES, MigrationCost,
                          QueueDepthAutoscaler, ScaleDecision, SLOAutoscaler,
-                         make_autoscaler, select_victim)
+                         make_autoscaler, select_victim, victim_scores)
 from .fleet import (Fleet, FleetConfig, est_capacity_rps, knee_cost,
                     run_fleet)
 from .invariants import (PlacementGuard, assert_conserved,
                          assert_percentiles, conserved_count, guarded_case)
+from .obs import (FlightRecorder, Observability, SpanTracer,
+                  WindowedMetrics, chrome_trace, detect_collapse_onset,
+                  span_conservation, validate_flight, validate_spans,
+                  validate_windows)
 from .router import (ROUTERS, AffinityRouter, GCRAwareRouter,
                      LeastOutstandingRouter, PowerOfTwoRouter,
                      PrefixAwareRouter, RoundRobinRouter, Router,
@@ -40,7 +46,18 @@ __all__ = [
     "MigrationCost",
     "VICTIM_POLICIES",
     "select_victim",
+    "victim_scores",
     "make_autoscaler",
+    "Observability",
+    "SpanTracer",
+    "FlightRecorder",
+    "WindowedMetrics",
+    "detect_collapse_onset",
+    "chrome_trace",
+    "span_conservation",
+    "validate_spans",
+    "validate_flight",
+    "validate_windows",
     "run_fleet",
     "knee_cost",
     "est_capacity_rps",

@@ -90,6 +90,25 @@ class ScaleDecision:
 VICTIM_POLICIES = ("least_outstanding", "coldest_cache")
 
 
+def victim_scores(policy: str, reports: Sequence[ReplicaReport],
+                  live: Sequence[int]) -> List[tuple]:
+    """Per-candidate sort key of a victim policy, lowest key retires.
+
+    This is the *rationale* behind ``select_victim`` - the flight
+    recorder (``obs.FlightRecorder``) logs it per scale-in decision so a
+    retirement can be root-caused from the trace alone.  The keys are
+    exactly the tuples ``select_victim`` minimizes, so the logged
+    rationale can never drift from the decision."""
+    if policy == "coldest_cache":
+        return [(reports[j].cache_tokens, reports[j].outstanding, live[j])
+                for j in range(len(live))]
+    if policy == "least_outstanding" or policy == "":
+        return [(reports[j].outstanding, live[j])
+                for j in range(len(live))]
+    raise ValueError(f"unknown victim policy {policy!r} "
+                     f"(want one of {VICTIM_POLICIES})")
+
+
 def select_victim(policy: str, reports: Sequence[ReplicaReport],
                   live: Sequence[int]) -> int:
     """Position in ``live`` of the replica a scale-in should retire.
@@ -105,14 +124,8 @@ def select_victim(policy: str, reports: Sequence[ReplicaReport],
     come off the signal bus, so victim selection is exactly as stale as
     every other control-plane read.
     """
-    idxs = range(len(live))
-    if policy == "coldest_cache":
-        return min(idxs, key=lambda j: (reports[j].cache_tokens,
-                                        reports[j].outstanding, live[j]))
-    if policy == "least_outstanding" or policy == "":
-        return min(idxs, key=lambda j: (reports[j].outstanding, live[j]))
-    raise ValueError(f"unknown victim policy {policy!r} "
-                     f"(want one of {VICTIM_POLICIES})")
+    keys = victim_scores(policy, reports, live)
+    return min(range(len(live)), key=keys.__getitem__)
 
 
 @dataclass(frozen=True)

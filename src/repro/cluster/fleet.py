@@ -142,7 +142,8 @@ class Fleet:
                  autoscale_every_ms: float = 500.0,
                  bus: Optional[SignalBus] = None,
                  migration: Optional[MigrationCost] = None,
-                 topology: Optional[FleetTopology] = None) -> None:
+                 topology: Optional[FleetTopology] = None,
+                 obs=None) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
         self.replicas = replicas
@@ -158,6 +159,10 @@ class Fleet:
         self.autoscale_every_ms = autoscale_every_ms
         self.bus = bus or SignalBus()
         self.migration = migration or MigrationCost()
+        # optional obs.Observability bundle: spans + control-plane flight
+        # recorder + windowed metrics.  None (the default) is the
+        # zero-overhead path - every hook below guards on it
+        self.obs = obs
         self.retired = [False] * len(replicas)
         # event-loop state (created in run())
         self._heap: list = []
@@ -206,6 +211,8 @@ class Fleet:
         self.topology.assign(idx, pod)
         self.telemetry.on_spawn(idx, t)
         self.telemetry.on_scale(t)
+        if self.obs is not None:
+            self.obs.on_spawn(idx, t, eng, pod)
         self._rebuild_live_views()
         if not self.bus.live:
             self._push(self.bus.next_publish_ms(t), "publish", idx)
@@ -244,6 +251,8 @@ class Fleet:
             # parked streams hold no KV (nothing in flight): handoff only
             self._push(t + self.migration.ms(0, kv), "migrate", r)
         self._migrating += len(active_moved) + len(parked_moved)
+        if self.obs is not None:
+            self.obs.on_retire(idx, t, done_t, active_moved, parked_moved)
         self.telemetry.on_retire(
             idx, done_t, migrated=len(active_moved) + len(parked_moved),
             prefix_tokens_lost=lost)
@@ -282,6 +291,9 @@ class Fleet:
         self._arrivals = [r.fresh() for r in
                           sorted(requests, key=lambda r: (r.arrive_ms, r.rid))]
         self._work = len(self._arrivals)
+        obs = self.obs
+        if obs is not None:
+            obs.begin(self)
         if self.autoscaler is not None:
             self._push(self.autoscale_every_ms, "scale", None)
         for i, eng in enumerate(self.replicas):
@@ -327,6 +339,8 @@ class Fleet:
             if t > max_ms:
                 break
             events += 1
+            if obs is not None and t >= obs.next_roll:
+                obs.roll(t)
             # work events advance the measured clock; bookkeeping ticks
             # (publish/scale) must not extend the measured duration
             if kind == "step":
@@ -336,13 +350,15 @@ class Fleet:
                 stepping[i] = False
                 eng = replicas[i]
                 if eng.active and not retired[i]:
-                    dt, _done = eng.step(t)
+                    dt, done = eng.step(t)
                     if dt > 0.0:
                         end_t = t + dt
                         stepping[i] = True
                         step_end[i] = end_t
                         self._work += 1
                         heappush(heap, (end_t, next(seq), "step", i))
+                    if done and obs is not None:
+                        obs.on_completions(done, i)
             elif kind == "arrive" or kind == "migrate":
                 self._work -= 1
                 now = t
@@ -357,23 +373,32 @@ class Fleet:
                     p = payload.pod % topo_pods
                     pod_arrivals[p] = pod_arrivals.get(p, 0) + 1
                 else:
+                    p = payload.pod % topo_pods
                     self._migrating -= 1
+                if obs is not None:
+                    obs.on_inject(payload, kind, t, p)
                 i = route(payload, self._live_views)
                 payload.replica = i
                 eng = replicas[i]
-                eng.submit(payload)
+                admitted = eng.submit(payload)
+                if obs is not None:
+                    obs.on_routed(payload, i, admitted, t)
                 if not stepping[i] and eng.active:
-                    dt, _done = eng.step(t)
+                    dt, done = eng.step(t)
                     if dt > 0.0:
                         end_t = t + dt
                         stepping[i] = True
                         step_end[i] = end_t
                         self._work += 1
                         heappush(heap, (end_t, next(seq), "step", i))
+                    if done and obs is not None:
+                        obs.on_completions(done, i)
             elif kind == "publish":
                 i = payload
                 if not self.retired[i]:
                     self.bus.publish(i, t)
+                    if obs is not None:
+                        obs.on_publish(i, t, bus.reports[i])
                     if self._work > 0:
                         self._push(self.bus.next_publish_ms(t), "publish", i)
             elif kind == "scale":
@@ -382,6 +407,10 @@ class Fleet:
                 if isinstance(decision, SimServeEngine):
                     # legacy hook protocol: a bare engine means scale out
                     decision = ScaleDecision(add=decision)
+                if obs is not None:
+                    # record BEFORE applying: the snapshot must be the
+                    # pre-action state the controller actually read
+                    obs.on_scale(t, decision)
                 if decision is not None:
                     if decision.add is not None:
                         self._scale_out(decision.add, t, decision.pod)
@@ -399,11 +428,16 @@ class Fleet:
         end = max([now] + [e for i, e in enumerate(self._step_end)
                            if self._stepping[i]])
         self._events = events
+        windows = None
+        if obs is not None:
+            obs.finish(end)
+            windows = obs.windows
         return self.telemetry.finalize(end, self.replicas, injected,
                                        migrating=self._migrating,
                                        events=events,
                                        topology=self.topology,
-                                       pod_arrivals=dict(pod_arrivals))
+                                       pod_arrivals=dict(pod_arrivals),
+                                       windows=windows)
 
 
 def run_fleet(requests: List[Request], router: Union[Router, str],
@@ -419,7 +453,8 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
               router_seed: Optional[int] = None,
               victim: str = "least_outstanding",
               pod_scoped: bool = False,
-              season_period_ms: Optional[float] = None) -> ClusterResult:
+              season_period_ms: Optional[float] = None,
+              obs=None) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
     ``router`` is a built ``Router`` or a policy name; a name is resolved
@@ -438,7 +473,9 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
     pool-scalar policy.  One ``FleetTopology`` built from ``cfg.n_pods``
     is shared by the router (by-name construction), the fleet, and the
     controller, so pod-scoped decisions and pod-affine routing read the
-    same replica<->pod partition.
+    same replica<->pod partition.  ``obs`` threads an
+    ``obs.Observability`` bundle through the run (None = untraced,
+    zero-overhead).
     """
     cfg = cfg or FleetConfig()
     slo = slo or SLO()
@@ -458,5 +495,5 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
                              pod_scoped=pod_scoped,
                              season_period_ms=season_period_ms)
     fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
-                  bus=bus, topology=topo)
+                  bus=bus, topology=topo, obs=obs)
     return fleet.run(requests, max_ms=max_ms)

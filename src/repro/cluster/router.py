@@ -72,6 +72,12 @@ class Router:
 
     name = "base"
     topology: Optional[FleetTopology] = None
+    # span tracer hook (obs.SpanTracer), installed per run by an
+    # Observability bundle; None is the zero-overhead default.  Scoring
+    # policies deposit their per-candidate keys on it (``note_scores``)
+    # so the recorded route decision carries the scores the placement
+    # scan actually computed
+    tracer = None
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         raise NotImplementedError
@@ -202,6 +208,8 @@ class GCRAwareRouter(Router):
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         group = self._partition(req.pod, views)
+        tracer = self.tracer
+        scores = [] if tracer is not None else None
         # single pass in ascending idx order; strict < keeps the first
         # (lowest-idx) candidate on ties, matching the (key, idx) min()
         free_idx = -1
@@ -219,12 +227,20 @@ class GCRAwareRouter(Router):
                 key = -head / limit
                 if free_idx < 0 or key < free_key:
                     free_idx, free_key = v.idx, key
+                if scores is not None:
+                    scores.append({"idx": v.idx, "rank": "free",
+                                   "key": key})
             elif free_idx < 0:
                 # all at their limit so far: track the shortest normalized
                 # passive queue (used only if no free slot turns up)
                 key = v.num_parked / limit
                 if park_idx < 0 or key < park_key:
                     park_idx, park_key = v.idx, key
+                if scores is not None:
+                    scores.append({"idx": v.idx, "rank": "park",
+                                   "key": key})
+        if tracer is not None:
+            tracer.note_scores(self.name, scores)
         return free_idx if free_idx >= 0 else park_idx
 
 

@@ -164,6 +164,15 @@ class ReplicaView:
             return pc.tokens if pc else 0
         return self._bus.reports[self.idx].cache_tokens
 
+    def age_ms(self, now_ms: float) -> float:
+        """How stale this view's signals are at ``now_ms``: 0.0 on the
+        live bus (reads are omniscient), else the age of the last
+        published report.  The span tracer stamps every route decision's
+        candidates with this - the staleness the router actually saw."""
+        if self._bus.live:
+            return 0.0
+        return now_ms - self._bus.reports[self.idx].t_ms
+
     @property
     def cache_hit_rate(self) -> float:
         """Lifetime prefix-hit-token rate by the last signal (0.0 when the

@@ -24,8 +24,9 @@ tokens delivered by requests that met their SLO.  This module aggregates:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -68,6 +69,16 @@ class ClusterResult:
     per_replica: List[Dict[str, float]] = field(default_factory=list)
     per_pod: List[Dict[str, float]] = field(default_factory=list)
     stats: Dict[str, float] = field(default_factory=dict)
+    # time-resolved fleet metrics from obs.WindowedMetrics (one dict per
+    # closed virtual-time window, keys per obs.WINDOW_FIELDS); empty
+    # unless the run was driven with a windowed Observability bundle
+    windows: List[Dict[str, Any]] = field(default_factory=list)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        """Machine-readable result: the full dataclass (aggregates,
+        per-replica/per-pod rollups, stats, window series) as JSON with
+        keys matching the windowed-metrics schema."""
+        return json.dumps(asdict(self), indent=indent, sort_keys=True)
 
     def summary(self) -> str:
         return (f"offered={self.offered} done={self.completed} "
@@ -113,7 +124,8 @@ class ClusterTelemetry:
     def finalize(self, now_ms: float, replicas: List[SimServeEngine],
                  offered: int, migrating: int = 0,
                  events: int = 0, topology=None,
-                 pod_arrivals: Optional[Dict[int, int]] = None
+                 pod_arrivals: Optional[Dict[int, int]] = None,
+                 windows: Optional[List[Dict[str, float]]] = None
                  ) -> ClusterResult:
         completed: List[Request] = []
         for eng in replicas:
@@ -240,6 +252,7 @@ class ClusterTelemetry:
             per_token_p99_ms=percentile(per_tok, 0.99),
             per_replica=per_replica,
             per_pod=per_pod,
+            windows=windows or [],
             stats={"scale_events": len(self.scale_events),
                    "scale_in_events": len(self.scale_in_events),
                    "migrated": self.migrated,

@@ -61,14 +61,24 @@ def main() -> None:
                          "see occupancy up to this stale (0 = omniscient)")
     ap.add_argument("--signal-jitter-ms", type=float, default=0.0,
                     help="seeded uniform extra delay per metrics publish")
+    ap.add_argument("--trace-out", metavar="PREFIX", default=None,
+                    help="cluster mode: record request spans + control-"
+                         "plane flight log and write PREFIX.spans.jsonl / "
+                         "PREFIX.trace.json (Perfetto) / "
+                         "PREFIX.flight.jsonl / PREFIX.windows.csv")
+    ap.add_argument("--window-ms", type=float, default=0.0,
+                    help="cluster mode: windowed fleet metrics every this "
+                         "many virtual ms (with --trace-out they land in "
+                         "PREFIX.windows.csv; alone they print the "
+                         "collapse-onset report)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.cluster:
         import dataclasses
 
-        from ..cluster import (FleetConfig, WorkloadSpec, est_capacity_rps,
-                               make_workload, run_fleet)
+        from ..cluster import (FleetConfig, Observability, WorkloadSpec,
+                               est_capacity_rps, make_workload, run_fleet)
         from ..serving.engine import StepCostModel
 
         if args.sessions:
@@ -86,6 +96,11 @@ def main() -> None:
         reqs = make_workload(args.workload, args.rps, args.duration_ms,
                              spec, args.seed)
         rpr = est_capacity_rps(spec, args.active_limit, 1)
+        obs = None
+        if args.trace_out or args.window_ms > 0.0:
+            obs = Observability(window_ms=args.window_ms,
+                                spans=args.trace_out is not None,
+                                flight=args.trace_out is not None)
         # router resolved by name inside run_fleet, seeded by router_seed:
         # the whole run is a pure function of --seed
         res = run_fleet(reqs, args.router,
@@ -95,7 +110,7 @@ def main() -> None:
                         jitter_ms=args.signal_jitter_ms,
                         signal_seed=args.seed,
                         rps_per_replica=rpr,
-                        router_seed=args.seed)
+                        router_seed=args.seed, obs=obs)
         print(f"router={args.router} admission={args.admission} "
               f"workload={args.workload} rps={args.rps:g} "
               f"staleness={args.staleness_ms:g}ms "
@@ -122,6 +137,22 @@ def main() -> None:
                   f"{r['peak_active']:>7} {r['peak_parked']:>7} "
                   f"{r['life_ms'] / 1e3:>7.1f} "
                   f"{r['cache_tokens']:>8,}")
+        if obs is not None:
+            if args.window_ms > 0.0:
+                onset = obs.onset()
+                if onset is None:
+                    print(f"onset: none in {len(obs.windows)} windows of "
+                          f"{args.window_ms:g}ms (goodput held within 50% "
+                          "of its loaded peak)")
+                else:
+                    print(f"onset: collapse at window {onset['window']} "
+                          f"(t={onset['t_ms']:,.0f}ms): goodput "
+                          f"{onset['goodput_tok_s']:,.0f} tok/s vs loaded "
+                          f"peak {onset['peak_tok_s']:,.0f} (window "
+                          f"{onset['peak_window']})")
+            if args.trace_out:
+                for stream, path in obs.export(args.trace_out).items():
+                    print(f"trace: {stream} -> {path}")
         return
 
     if args.fleet_sweep:

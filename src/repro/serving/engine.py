@@ -231,7 +231,7 @@ class SimServeEngine:
                  "_resident", "_nsteps", "_join_seq", "_pod_count",
                  "_pending_prefill", "_finish_heap", "_is_pod_adm",
                  "_has_cancel", "_reports_demoted", "peak_active",
-                 "peak_parked")
+                 "peak_parked", "obs")
 
     def __init__(self, admission, cost: Optional[StepCostModel] = None,
                  avg_prompt: int = 512,
@@ -244,6 +244,10 @@ class SimServeEngine:
         self.active: Dict[int, Request] = {}
         self.completed: List[Request] = []
         self.tokens_out = 0
+        # engine-side span hook (cluster.obs._EngineObs), installed by an
+        # Observability bundle; None is the zero-overhead default - the
+        # three step() hook sites guard on it and emit nothing
+        self.obs = None
         self._reset_accounting()
 
     # -- incremental accounting ----------------------------------------------
@@ -455,6 +459,8 @@ class SimServeEngine:
         if pending:
             for r in pending.values():
                 r.first_token_ms = end
+            if self.obs is not None:
+                self.obs.on_first_tokens(pending, end)
             pending.clear()
 
         # completions: drain the finish calendar up to this step, drop
@@ -489,6 +495,8 @@ class SimServeEngine:
                 if new_rid in requests and new_rid not in active and \
                         requests[new_rid].done_ms < 0:
                     self._activate(requests[new_rid])
+                    if self.obs is not None:
+                        self.obs.on_unpark(new_rid, end)
             # demotions: active streams the admission evicted during this
             # release (reported O(1); generic admissions fall back to the
             # legacy scan)
@@ -496,10 +504,14 @@ class SimServeEngine:
                 for rid2 in adm.last_demoted:
                     if rid2 in active:
                         self._deactivate(rid2)
+                        if self.obs is not None:
+                            self.obs.on_demote(rid2, end)
             else:
                 for rid2 in list(active.keys()):
                     if rid2 not in getattr(adm, "active", {rid2: None}):
                         self._deactivate(rid2)
+                        if self.obs is not None:
+                            self.obs.on_demote(rid2, end)
         if pc is not None:
             for r in done:
                 if r.prefix_id >= 0:

@@ -1,0 +1,314 @@
+"""Observability layer: span round-trips, windowed rollups, flight-recorder
+fidelity, collapse-onset detection, and the zero-perturbation contract.
+
+The strongest pin here is bit-identity WITH tracing enabled: the golden
+digests of ``tests/golden/cluster_traces.json`` must come out unchanged
+when a full ``Observability`` bundle rides along, because every hook is a
+pure read of fleet state.  (The disabled path is pinned by
+``test_golden.py`` itself - ``obs=None`` IS the default goldens run.)
+"""
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+import test_golden as tg  # noqa: E402  (golden scenario helpers)
+
+from repro.cluster import (SLO, ClusterTelemetry, Fleet, Observability,  # noqa: E402
+                           ScaleDecision, chrome_trace,
+                           detect_collapse_onset, make_router, run_fleet,
+                           select_victim, span_conservation, validate_flight,
+                           validate_spans, validate_windows)
+from repro.cluster import obs as obs_mod  # noqa: E402
+from repro.cluster.obs import (WINDOW_FIELDS, read_jsonl,  # noqa: E402
+                               write_jsonl)
+
+
+def _run_golden_with_obs(policy="gcr_aware", window_ms=250.0):
+    """The golden scenario with a full observer bundle attached."""
+    obs = Observability(window_ms=window_ms)
+    reqs = tg._workload()
+    cfg = tg._cfg()
+    router = make_router(policy, seed=1, n_pods=2)
+    fleet = Fleet(cfg.make_engines(), router, ClusterTelemetry(SLO()),
+                  obs=obs)
+    res = fleet.run(reqs, max_ms=60_000.0)
+    rows = tg._trace_rows(res, fleet.replicas)
+    digest = hashlib.sha256("\n".join(rows).encode()).hexdigest()
+    return obs, res, digest
+
+
+@pytest.fixture(scope="module")
+def traced():
+    return _run_golden_with_obs()
+
+
+# -- zero-perturbation: goldens survive tracing ------------------------------
+
+@pytest.mark.parametrize("policy", ["gcr_aware", "affinity", "round_robin"])
+def test_enabled_tracing_is_bit_identical_to_golden(policy):
+    golden = json.loads(tg.GOLDEN_PATH.read_text())[policy]
+    _obs, res, digest = _run_golden_with_obs(policy)
+    assert digest == golden["digest"], \
+        f"{policy}: observation perturbed the simulation"
+    assert res.completed == golden["completed"]
+    assert res.offered == golden["offered"]
+
+
+def test_disabled_obs_matches_golden_default_path():
+    """obs=None run_fleet equals the golden digest (the goldens were
+    recorded with no observer; this pins that run_fleet(obs=None) is that
+    same code path, not a degenerate always-on observer)."""
+    golden = json.loads(tg.GOLDEN_PATH.read_text())["gcr_aware"]
+    reqs = tg._workload()
+    res = run_fleet(reqs, make_router("gcr_aware", seed=1, n_pods=2),
+                    tg._cfg(), max_ms=60_000.0, obs=None)
+    assert res.completed == golden["completed"]
+    assert res.offered == golden["offered"]
+
+
+# -- span stream: schema, round-trip, conservation ---------------------------
+
+def test_span_stream_validates_and_conserves(traced):
+    obs, res, _ = traced
+    records = obs.tracer.records()
+    assert validate_spans(records) == []
+    cons = span_conservation(records)
+    assert cons["violations"] == []
+    assert cons["arrives"] == res.offered
+    assert cons["completes"] == res.completed
+    assert cons["requests"] == res.offered
+    # every injection routed, every route placed
+    assert cons["routes"] == cons["arrives"] + cons["migrate_ins"]
+    assert cons["admits"] + cons["parks"] == cons["routes"]
+    assert cons["first_tokens"] == res.completed
+
+
+def test_span_roundtrip_through_jsonl(tmp_path, traced):
+    obs, _res, _ = traced
+    path = tmp_path / "spans.jsonl"
+    write_jsonl(str(path), obs.tracer.records())
+    back = read_jsonl(str(path))
+    assert back == obs.tracer.records()
+    assert validate_spans(back) == []
+    assert span_conservation(back) == span_conservation(
+        obs.tracer.records())
+
+
+def test_route_spans_carry_candidate_scores(traced):
+    obs, _res, _ = traced
+    routes = [e for e in obs.tracer.events if e["event"] == "route"]
+    assert routes, "no route spans emitted"
+    for e in routes:
+        assert isinstance(e["candidates"], list) and e["candidates"]
+        for c in e["candidates"]:
+            assert {"idx", "outstanding", "active_limit",
+                    "staleness_ms"} <= set(c)
+    # the gcr_aware scorer deposits its placement keys on the route span
+    scored = [e for e in routes if e.get("scores")]
+    assert scored, "gcr_aware route spans carry no scores"
+    for e in scored:
+        assert e["scorer"] == "gcr_aware"
+        for s in e["scores"]:
+            assert {"idx", "rank", "key"} <= set(s)
+
+
+def test_validators_flag_corruption(traced):
+    obs, _res, _ = traced
+    records = obs.tracer.records()
+    assert validate_spans(records[1:]), "missing header not flagged"
+    bad = [dict(r) for r in records]
+    bad[1]["event"] = "teleport"
+    assert any("teleport" in e for e in validate_spans(bad))
+    # drop one complete: conservation itself stays legal (complete is
+    # at-most-once) but dropping an arrive breaks it
+    no_arrive = [r for r in records
+                 if not (r.get("kind") == "span"
+                         and r.get("event") == "arrive"
+                         and r.get("rid") == 0)]
+    assert any("rid 0" in e for e in validate_spans(no_arrive))
+
+
+# -- windowed metrics --------------------------------------------------------
+
+def test_window_rollups_conserve_run_totals(traced):
+    obs, res, _ = traced
+    rows = obs.windows
+    assert rows and validate_windows(rows) == []
+    assert sum(int(w["arrivals"]) for w in rows) == res.offered
+    assert sum(int(w["completed"]) for w in rows) == res.completed
+    assert sum(int(w["slo_met"]) for w in rows) \
+        == round(res.slo_attainment * res.offered)
+    wins = [w["window"] for w in rows]
+    assert wins == sorted(wins) and len(set(wins)) == len(wins)
+    for w in rows:
+        assert w["t_end_ms"] - w["t_start_ms"] == pytest.approx(250.0)
+        assert w["good_tokens"] <= w["tokens"]
+
+
+def test_window_csv_roundtrip(tmp_path, traced):
+    obs, _res, _ = traced
+    paths = obs.export(str(tmp_path / "run"))
+    rows = obs_mod._read_windows_csv(paths["windows"])
+    assert len(rows) == len(obs.windows)
+    assert validate_windows(rows) == []
+    for got, want in zip(rows, obs.windows):
+        for f in WINDOW_FIELDS:
+            assert got[f] == pytest.approx(want[f])
+
+
+def test_per_replica_and_pod_window_streams(traced):
+    obs, _res, _ = traced
+    m = obs.metrics
+    assert m.replica_rows and m.pod_rows
+    fleet_completed = sum(int(w["completed"]) for w in m.fleet_rows)
+    assert sum(int(w["completed"]) for w in m.replica_rows) \
+        == fleet_completed
+    assert sum(int(w["completed"]) for w in m.pod_rows) == fleet_completed
+
+
+# -- collapse-onset detector -------------------------------------------------
+
+def _mk_windows(goodputs, arrivals):
+    return [{"window": i, "t_start_ms": 250.0 * i,
+             "t_end_ms": 250.0 * (i + 1), "arrivals": a,
+             "goodput_tok_s": g}
+            for i, (g, a) in enumerate(zip(goodputs, arrivals))]
+
+
+def test_onset_found_when_goodput_halves_under_load():
+    rows = _mk_windows([1000, 1100, 1000, 400, 100],
+                       [50, 50, 50, 50, 50])
+    onset = detect_collapse_onset(rows)
+    assert onset is not None and onset["window"] == 3
+    assert onset["peak_tok_s"] == 1100
+    assert onset["t_ms"] == pytest.approx(750.0)
+
+
+def test_onset_ignores_drain_tail():
+    """Goodput decaying after offered load stops is a drain, not a
+    collapse: low-arrival windows are excluded."""
+    rows = _mk_windows([1000, 1100, 1000, 400, 100],
+                       [50, 50, 50, 2, 0])
+    assert detect_collapse_onset(rows) is None
+
+
+def test_onset_none_when_goodput_holds():
+    rows = _mk_windows([1000, 1100, 950, 1000], [50, 50, 50, 50])
+    assert detect_collapse_onset(rows) is None
+
+
+# -- flight recorder ---------------------------------------------------------
+
+def test_flight_recorder_reproduces_scripted_decisions(traced):
+    """A scripted autoscaler's exact decisions must come back from the
+    recorder, and each tick carries the (stale) bus snapshot it read."""
+    took = []
+
+    def scripted(fleet, now_ms):
+        live = fleet.live_indices()
+        if len(took) < 2 and len(live) > 2:
+            reports = fleet.bus.snapshot(now_ms, live)
+            k = select_victim("least_outstanding", reports, live)
+            d = ScaleDecision(remove=live[k], victim="least_outstanding",
+                              reason="scripted")
+            took.append((now_ms, d))
+            return d
+        return None
+
+    obs = Observability(spans=False, flight=True)
+    res = run_fleet(tg._workload(), make_router("gcr_aware", seed=1,
+                                                n_pods=2),
+                    tg._cfg(), max_ms=60_000.0, autoscale=scripted,
+                    obs=obs)
+    assert took and res.stats["scale_in_events"] == len(took)
+    got = obs.recorder.decisions()
+    assert len(got) == len(took)
+    for g, (t, d) in zip(got, took):
+        assert g["t_ms"] == t
+        assert g["action"] == "remove"
+        assert g["remove"] == d.remove
+        assert g["victim"] == d.victim and g["reason"] == d.reason
+        assert g["snapshot"], "tick recorded without bus state"
+        assert all(s["staleness_ms"] >= 0.0 for s in g["snapshot"])
+        # victim rationale covers the candidates and names the victim
+        assert any(r["replica"] == d.remove
+                   for r in g["victim_rationale"])
+    assert validate_flight(obs.recorder.records()) == []
+    # retire entries mirror the scale-ins
+    retires = [e for e in obs.recorder.entries if e["kind"] == "retire"]
+    assert len(retires) == len(took)
+
+
+def test_flight_recorder_logs_publishes(traced):
+    """On a periodic bus every publish lands in the flight log."""
+    obs = Observability(spans=False, flight=True)
+    res = run_fleet(tg._workload(), make_router("gcr_aware", seed=1,
+                                                n_pods=2),
+                    tg._cfg(), max_ms=60_000.0, staleness_ms=100.0,
+                    signal_seed=3, obs=obs)
+    pubs = [e for e in obs.recorder.entries if e["kind"] == "publish"]
+    assert pubs and res.completed > 0
+    for p in pubs:
+        assert isinstance(p["report"], dict)
+        assert p["report"]["t_ms"] <= p["t_ms"]
+
+
+# -- exporters / CLI / bundle contract ---------------------------------------
+
+def test_chrome_trace_structure(traced):
+    obs, res, _ = traced
+    doc = chrome_trace(obs.tracer, obs.recorder, obs.metrics)
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    slices = [e for e in evs if e["ph"] == "X"]
+    rids = {e["rid"] for e in obs.tracer.events}
+    assert len(slices) == len(rids)
+    assert all(e["dur"] >= 0.0 for e in slices)
+    assert any(e["ph"] == "C" for e in evs), "no counter track"
+    assert any(e["ph"] == "M" for e in evs), "no process names"
+    json.dumps(doc)  # must be serializable as-is
+
+
+def test_export_writes_all_streams_and_cli_validates(tmp_path, traced,
+                                                     capsys):
+    obs, _res, _ = traced
+    paths = obs.export(str(tmp_path / "run"))
+    assert set(paths) == {"spans", "trace", "flight", "windows"}
+    rc = obs_mod.main(["--validate", paths["spans"],
+                       "--flight", paths["flight"],
+                       "--windows", paths["windows"]])
+    assert rc == 0
+    assert capsys.readouterr().out.count("ok") == 3
+    # a corrupted stream fails the CLI
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"kind": "span", "event": "nope", "rid": 0, '
+                   '"t_ms": 1.0}\n')
+    assert obs_mod.main(["--validate", str(bad)]) == 1
+    # the Perfetto file is valid JSON with trace events
+    doc = json.loads(pathlib.Path(paths["trace"]).read_text())
+    assert doc["traceEvents"]
+
+
+def test_observability_is_single_use(traced):
+    obs = Observability(window_ms=500.0)
+    reqs = tg._workload()[:50]
+    run_fleet(reqs, make_router("round_robin", seed=1, n_pods=2),
+              tg._cfg(), max_ms=60_000.0, obs=obs)
+    with pytest.raises(RuntimeError, match="single-run"):
+        run_fleet(reqs, make_router("round_robin", seed=1, n_pods=2),
+                  tg._cfg(), max_ms=60_000.0, obs=obs)
+
+
+def test_cluster_result_to_json_carries_windows(traced):
+    _obs, res, _ = traced
+    doc = json.loads(res.to_json())
+    assert doc["offered"] == res.offered
+    assert doc["windows"] == res.windows
+    assert res.windows, "run_fleet did not attach the window series"
+    assert set(WINDOW_FIELDS) <= set(res.windows[0])
