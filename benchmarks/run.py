@@ -22,6 +22,26 @@ import sys
 import time
 
 
+def _lint_gate():
+    """Determinism-contract gate (DESIGN.md 10) as a bench suite: a new
+    finding or stale baseline is a failed claim, same as any asserted
+    bench number."""
+    from pathlib import Path
+
+    from repro.lint import run_lint
+
+    result = run_lint(Path(__file__).resolve().parent.parent)
+    assert result.ok, \
+        "determinism lint gate failed:\n" + result.render_text()
+    suppressed = sum(1 for f in result.findings if f.suppressed)
+    return [
+        ("lint/findings_total", float(len(result.findings)), ""),
+        ("lint/new", 0.0, "gate: must be 0"),
+        ("lint/grandfathered", float(len(result.baseline)), ""),
+        ("lint/suppressed", float(suppressed), ""),
+    ]
+
+
 def _suites():
     if "src" not in sys.path:
         sys.path.insert(0, "src")
@@ -29,6 +49,7 @@ def _suites():
                             scale_bench, serving_bench)
 
     return [
+        ("lint", _lint_gate),
         ("ablation", ablation.knob_sensitivity),
         ("fig1", figures.fig1_collapse),
         ("fig6", figures.fig6_throughput),

@@ -685,7 +685,7 @@ def chrome_trace(tracer: SpanTracer,
     for e in tracer.events:
         by_rid.setdefault(e["rid"], []).append(e)
     for rid in sorted(by_rid):
-        es = sorted(by_rid[rid], key=lambda e: e["t_ms"])
+        es = sorted(by_rid[rid], key=lambda e: e["t_ms"])  # lint: disable=R203(export-only view; stable sort keeps the tracer's deterministic emission order on ties)
         t0 = es[0]["t_ms"]
         dones = [e for e in es if e["event"] == "complete"]
         t1 = dones[-1]["t_ms"] if dones else es[-1]["t_ms"]

@@ -321,7 +321,7 @@ def replay(trace: Iterable[Tuple], start_rid: int = 0) -> List[Request]:
                            gen_len=int(g), pod=int(pod), arrive_ms=float(t),
                            session_id=int(s), prefix_id=int(pfx_id),
                            prefix_len=int(pfx_len)))
-    out.sort(key=lambda r: r.arrive_ms)
+    out.sort(key=lambda r: (r.arrive_ms, r.rid))
     return out
 
 

@@ -165,6 +165,8 @@ class GCRAdmission:
 class NoAdmission:
     """Baseline: admit everything (the 'no GCR' engine)."""
 
+    __slots__ = ("active", "step")
+
     last_demoted: tuple = ()          # never demotes; engine skips the scan
 
     def __init__(self) -> None:

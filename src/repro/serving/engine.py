@@ -540,7 +540,7 @@ class SimServeEngine:
         self._reset_accounting()
         adm = self.admission
         now = 0.0
-        pending = sorted(requests, key=lambda r: r.arrive_ms)
+        pending = sorted(requests, key=lambda r: (r.arrive_ms, r.rid))
         pi = 0
 
         while now < max_ms:

@@ -1,0 +1,555 @@
+"""Tests for the determinism-contract linter (DESIGN.md 10).
+
+Four layers:
+
+* fixture snippets per rule family — at least one true-positive and one
+  true-negative each, so a rule regression flips a named test;
+* the findings engine itself — suppression parsing, key stability under
+  line drift, baseline deltas (new vs grandfathered vs stale);
+* integration — ``python -m repro.lint --json`` over the live tree must
+  match the committed baseline exactly (the tree stays lint-clean);
+* the two contract properties the linter exists to guard, exercised
+  for real: identical trace digests under different ``PYTHONHASHSEED``
+  values, and ``repro.lint`` importable/runnable with jax blocked.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.lint import (classify_change, lint_snippet, lint_sources,
+                        run_lint)
+from repro.lint.contract import BASELINE_PATH, CONTRACT, EXPLAIN
+from repro.lint.findings import (Finding, assign_indices, diff_baseline,
+                                 load_baseline, save_baseline,
+                                 suppressions_for)
+from repro.lint.impact import AFFECTING, NEUTRAL
+from repro.lint.surface import check_contract, check_slots
+
+REPO = Path(__file__).resolve().parent.parent
+CLUSTER_PATH = "src/repro/cluster/snippet.py"     # inside tie-break scope
+
+
+def rules_of(src: str, path: str = CLUSTER_PATH):
+    return [f.rule for f in lint_snippet(textwrap.dedent(src), path)]
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+# -- R1: nondeterminism sources ---------------------------------------------
+
+def test_r101_wallclock_true_positive():
+    assert "R101" in rules_of("""
+        import time
+        def stamp():
+            return time.time()
+    """)
+
+
+def test_r101_resolves_from_import_alias():
+    assert "R101" in rules_of("""
+        from time import perf_counter
+        def stamp():
+            return perf_counter()
+    """)
+
+
+def test_r101_sleep_is_not_a_clock_read():
+    assert "R101" not in rules_of("""
+        import time
+        def backoff():
+            time.sleep(0.01)
+    """)
+
+
+def test_r101_allowlisted_timing_harness():
+    src = """
+        import time
+        def bench():
+            return time.perf_counter()
+    """
+    assert "R101" in rules_of(src)
+    assert "R101" not in rules_of(src, path="benchmarks/perf_guard.py")
+
+
+def test_r102_global_rng_true_positive():
+    assert rules_of("""
+        import random
+        def jitter():
+            return random.random()
+    """).count("R102") == 1
+
+
+def test_r102_legacy_numpy_rng_true_positive():
+    assert "R102" in rules_of("""
+        import numpy as np
+        def noise(n):
+            return np.random.rand(n)
+    """)
+
+
+def test_r102_urandom_true_positive():
+    assert "R102" in rules_of("""
+        import os
+        def token():
+            return os.urandom(8)
+    """)
+
+
+def test_r102_seeded_instances_are_the_sanctioned_idiom():
+    assert "R102" not in rules_of("""
+        import random
+        import numpy as np
+        def make(seed):
+            rng = random.Random(seed)
+            gen = np.random.default_rng(seed)
+            return rng.random() + gen.standard_normal()
+    """)
+
+
+def test_r103_builtin_hash_true_positive():
+    assert "R103" in rules_of("""
+        def bucket(name, n):
+            return hash(name) % n
+    """)
+
+
+def test_r103_hashlib_is_fine():
+    assert "R103" not in rules_of("""
+        import hashlib
+        def bucket(name):
+            return hashlib.sha256(name.encode()).hexdigest()
+    """)
+
+
+# -- R2: ordering hazards ---------------------------------------------------
+
+def test_r201_set_iteration_true_positive():
+    assert "R201" in rules_of("""
+        def dispatch(ids, emit):
+            for rid in set(ids):
+                emit(rid)
+    """)
+
+
+def test_r201_set_comprehension_source_true_positive():
+    assert "R201" in rules_of("""
+        def order(xs):
+            return [x for x in {1, 2, 3} | set(xs)]
+    """)
+
+
+def test_r201_sorted_set_is_fine():
+    assert "R201" not in rules_of("""
+        def dispatch(ids, emit):
+            for rid in sorted(set(ids)):
+                emit(rid)
+    """)
+
+
+def test_r202_bare_popitem_true_positive():
+    assert "R202" in rules_of("""
+        def evict(cache):
+            return cache.popitem()
+    """)
+
+
+def test_r202_explicit_end_is_fine():
+    assert "R202" not in rules_of("""
+        def evict(cache):
+            return cache.popitem(last=False)
+    """)
+
+
+def test_r203_bare_float_sort_key_true_positive():
+    assert "R203" in rules_of("""
+        def order(requests):
+            return sorted(requests, key=lambda r: r.arrive_ms)
+    """)
+
+
+def test_r203_tuple_tiebreak_is_fine():
+    assert "R203" not in rules_of("""
+        def order(requests):
+            return sorted(requests, key=lambda r: (r.arrive_ms, r.rid))
+    """)
+
+
+def test_r203_heappush_missing_tiebreak_true_positive():
+    assert "R203" in rules_of("""
+        from heapq import heappush
+        def schedule(heap, t, payload):
+            heappush(heap, (t, payload))
+    """)
+
+
+def test_r203_heappush_with_seq_is_fine():
+    assert "R203" not in rules_of("""
+        from heapq import heappush
+        def schedule(heap, t, seq, payload):
+            heappush(heap, (t, next(seq), payload))
+    """)
+
+
+def test_r203_only_applies_inside_cluster_and_serving():
+    src = """
+        def order(requests):
+            return sorted(requests, key=lambda r: r.arrive_ms)
+    """
+    assert "R203" in rules_of(src, path="src/repro/serving/x.py")
+    assert "R203" not in rules_of(src, path="src/repro/core/x.py")
+
+
+# -- R3: the legacy-default contract ----------------------------------------
+
+TOPO = "src/repro/cluster/topology.py"
+
+
+def _topo_findings(body: str):
+    src = textwrap.dedent(body)
+    return [f for f in check_contract({TOPO: src}, REPO)
+            if f.path == TOPO]
+
+
+def test_r3_matching_surface_is_clean():
+    assert _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods=1, assignment=None):
+                pass
+    """) == []
+
+
+def test_r302_default_drift_true_positive():
+    found = _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods=2, assignment=None):
+                pass
+    """)
+    assert [f.rule for f in found] == ["R302"]
+    assert "n_pods" in found[0].message
+
+
+def test_r301_lost_default_true_positive():
+    found = _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods, assignment=None):
+                pass
+    """)
+    assert [f.rule for f in found] == ["R301"]
+
+
+def test_r303_unregistered_knob_true_positive():
+    found = _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods=1, assignment=None, wobble=3):
+                pass
+    """)
+    assert [f.rule for f in found] == ["R303"]
+    assert "wobble" in found[0].message
+
+
+def test_r302_stale_table_entry_true_positive():
+    found = _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods=1):
+                pass
+    """)
+    assert [f.rule for f in found] == ["R302"]
+    assert "assignment" in found[0].message
+
+
+def test_r304_missing_pinned_by_test(monkeypatch):
+    entry = dict(CONTRACT[TOPO]["FleetTopology"],
+                 pinned_by="tests/does_not_exist.py")
+    monkeypatch.setitem(CONTRACT[TOPO], "FleetTopology", entry)
+    found = _topo_findings("""
+        class FleetTopology:
+            def __init__(self, n_pods=1, assignment=None):
+                pass
+    """)
+    assert [f.rule for f in found] == ["R304"]
+
+
+# -- R4: pickle-safety ------------------------------------------------------
+
+def test_r401_lambda_into_sweep_true_positive():
+    assert "R401" in rules_of("""
+        def sweep(points, jobs):
+            return run_grid(points, jobs, key=lambda p: p.tag)
+    """, path="benchmarks/x.py")
+
+
+def test_r401_local_closure_passed_by_value_true_positive():
+    assert "R401" in rules_of("""
+        def sweep(jobs):
+            def score(p):
+                return p.tag
+            return run_grid(score, jobs)
+    """, path="benchmarks/x.py")
+
+
+def test_r401_calling_a_local_builder_is_fine():
+    assert "R401" not in rules_of("""
+        def sweep(grid, jobs):
+            def point(g):
+                return GridPoint(tag=g)
+            return run_grid([point(g) for g in grid], jobs)
+    """, path="benchmarks/x.py")
+
+
+def test_r401_generator_expression_true_positive():
+    assert "R401" in rules_of("""
+        def sweep(grid, jobs):
+            return run_grid((GridPoint(tag=g) for g in grid), jobs)
+    """, path="benchmarks/x.py")
+
+
+# -- R5: __slots__ roster ---------------------------------------------------
+
+ADMISSION = "src/repro/core/admission.py"
+
+
+def _slots_findings(body: str):
+    return [f for f in check_slots({ADMISSION: textwrap.dedent(body)})
+            if f.scope == "NoAdmission" and "roster" not in f.message]
+
+
+def test_r501_missing_slots_true_positive():
+    assert [f.rule for f in _slots_findings("""
+        class NoAdmission:
+            def __init__(self):
+                self.active = {}
+    """)] == ["R501"]
+
+
+def test_r501_slots_attribute_is_fine():
+    assert _slots_findings("""
+        class NoAdmission:
+            __slots__ = ("active",)
+    """) == []
+
+
+def test_r501_dataclass_slots_is_fine():
+    assert _slots_findings("""
+        from dataclasses import dataclass
+        @dataclass(slots=True)
+        class NoAdmission:
+            active: int = 0
+    """) == []
+
+
+# -- suppressions and baseline deltas ---------------------------------------
+
+def test_suppression_parsing():
+    sup = suppressions_for(
+        "x = 1\n"
+        "y = sorted(a)  # lint: disable=R203(stable export), R101\n")
+    assert sup == {2: {"R203": "stable export",
+                       "R101": "no reason given"}}
+
+
+def test_suppressed_finding_keeps_reason_and_passes_gate():
+    found = lint_snippet(textwrap.dedent("""
+        def order(requests):
+            return sorted(requests, key=lambda r: r.arrive_ms)  # lint: disable=R203(ties impossible here)
+    """))
+    [f] = [f for f in found if f.rule == "R203"]
+    assert f.suppressed == "ties impossible here"
+    new, stale = diff_baseline(found, [])
+    assert new == [] and stale == []
+
+
+def test_unrelated_rule_id_does_not_suppress():
+    found = lint_snippet(textwrap.dedent("""
+        def order(requests):
+            return sorted(requests, key=lambda r: r.arrive_ms)  # lint: disable=R101(wrong rule)
+    """))
+    [f] = [f for f in found if f.rule == "R203"]
+    assert f.suppressed is None
+
+
+def test_finding_keys_are_line_drift_tolerant():
+    a = assign_indices([Finding("R203", "p.py", 10, "f", "m"),
+                        Finding("R203", "p.py", 20, "f", "m")])
+    b = assign_indices([Finding("R203", "p.py", 110, "f", "m"),
+                        Finding("R203", "p.py", 120, "f", "m")])
+    assert [f.key for f in a] == [f.key for f in b]
+    assert a[0].key != a[1].key
+
+
+def test_baseline_delta_new_and_stale(tmp_path):
+    base = tmp_path / "baseline.json"
+    first = assign_indices([Finding("R203", "p.py", 1, "f", "m")])
+    save_baseline(base, first)
+    keys = load_baseline(base)
+
+    # same findings -> clean gate
+    new, stale = diff_baseline(first, keys)
+    assert new == [] and stale == []
+
+    # an extra finding -> new; a fixed finding -> stale
+    both = assign_indices(first + [Finding("R101", "p.py", 2, "g", "m")])
+    new, stale = diff_baseline(both, keys)
+    assert [f.rule for f in new] == ["R101"] and stale == []
+    new, stale = diff_baseline([], keys)
+    assert new == [] and stale == keys
+
+
+# -- integration: the live tree matches the committed baseline --------------
+
+def test_live_tree_is_clean_against_committed_baseline():
+    result = run_lint(REPO)
+    assert result.ok, "\n" + result.render_text()
+    committed = load_baseline(REPO / BASELINE_PATH)
+    active = sorted(f.key for f in result.findings if not f.suppressed)
+    assert active == sorted(committed)
+
+
+def test_cli_json_over_live_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--json"],
+        cwd=REPO, env=_env(), capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] is True
+    assert payload["new"] == [] and payload["stale_baseline"] == []
+
+
+def test_cli_explain_prints_design_section():
+    for rule in EXPLAIN:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.lint", "--explain", rule],
+            cwd=REPO, env=_env(), capture_output=True, text=True)
+        assert proc.returncode == 0
+        assert "DESIGN.md" in proc.stdout
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--explain", "R999"],
+        cwd=REPO, env=_env(), capture_output=True, text=True)
+    assert proc.returncode == 2
+
+
+# -- R6: the golden-impact analyzer -----------------------------------------
+
+def test_impact_telemetry_formatting_change_is_neutral():
+    path = "src/repro/cluster/telemetry.py"
+    old = (REPO / path).read_text()
+    new = old.replace("tokens/s", "tok/s", 1)
+    assert old != new
+    got = classify_change(path, old, new)
+    assert got.verdict == NEUTRAL
+
+
+def test_impact_engine_tiebreak_change_is_affecting():
+    path = "src/repro/serving/engine.py"
+    old = (REPO / path).read_text()
+    new = old.replace("key=lambda r: (r.arrive_ms, r.rid)",
+                      "key=lambda r: r.arrive_ms")
+    assert old != new
+    got = classify_change(path, old, new)
+    assert got.verdict == AFFECTING
+
+
+def test_impact_comment_only_engine_change_is_neutral():
+    path = "src/repro/serving/engine.py"
+    old = (REPO / path).read_text()
+    new = old + "\n# a trailing comment changes no AST node\n"
+    got = classify_change(path, old, new)
+    assert got.verdict == NEUTRAL
+    assert "AST is unchanged" in got.reason
+
+
+def test_impact_docs_and_tests_are_neutral():
+    for path in ("DESIGN.md", "tests/test_golden.py",
+                 ".github/workflows/ci.yml",
+                 "src/repro/lint/rules.py"):
+        assert classify_change(path, "a", "b").verdict == NEUTRAL
+
+
+def test_impact_cli_runs_against_git():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--impact", "HEAD",
+         "--json"],
+        cwd=REPO, env=_env(), capture_output=True, text=True)
+    if proc.returncode == 2:        # not a git checkout (sdist etc.)
+        pytest.skip("no git history available")
+    payload = json.loads(proc.stdout)
+    assert payload["verdict"] in (NEUTRAL, AFFECTING)
+
+
+# -- the contract, exercised for real ---------------------------------------
+
+_HASHSEED_SCRIPT = textwrap.dedent("""
+    import hashlib
+    from repro.cluster import (SLO, ClusterTelemetry, Fleet, FleetConfig,
+                               WorkloadSpec, make_router, sessions)
+
+    spec = WorkloadSpec(prompt_range=(64, 128), gen_range=(16, 32),
+                        n_pods=2)
+    reqs = sessions(6.0, 1_200.0, spec, seed=3, think_ms=300.0)
+    cfg = FleetConfig(n_replicas=2, admission="gcr", active_limit=16,
+                      n_pods=2)
+    fleet = Fleet(cfg.make_engines(), make_router("gcr_aware", n_pods=2),
+                  ClusterTelemetry(SLO()))
+    fleet.run(reqs, max_ms=30_000.0)
+    rows = sorted((r for eng in fleet.replicas for r in eng.completed),
+                  key=lambda r: r.rid)
+    blob = "\\n".join(
+        f"{r.rid}:{r.replica}:{r.first_token_ms.hex()}:{r.done_ms.hex()}"
+        for r in rows)
+    print(hashlib.sha256(blob.encode()).hexdigest())
+""")
+
+
+def test_trace_digest_is_hash_seed_independent():
+    """R1/R2 guard a property CI exercises: the same seeded fleet must
+    produce bit-identical traces under different PYTHONHASHSEED."""
+    digests = []
+    for seed in ("0", "1"):
+        env = _env()
+        env["PYTHONHASHSEED"] = seed
+        proc = subprocess.run([sys.executable, "-c", _HASHSEED_SCRIPT],
+                              cwd=REPO, env=env, capture_output=True,
+                              text=True)
+        assert proc.returncode == 0, proc.stderr
+        digests.append(proc.stdout.strip())
+    assert digests[0] == digests[1]
+    assert len(digests[0]) == 64
+
+
+_JAXFREE_SCRIPT = textwrap.dedent("""
+    import sys
+
+    class _BlockJax:
+        def find_spec(self, name, path=None, target=None):
+            if name == "jax" or name.startswith("jax."):
+                raise ImportError("jax blocked for lint-only env test")
+            return None
+
+    sys.meta_path.insert(0, _BlockJax())
+
+    import repro.lint
+    from repro.lint.cli import main
+
+    assert "jax" not in sys.modules
+    assert main(["--explain", "R101"]) == 0
+    assert "jax" not in sys.modules
+    print("ok")
+""")
+
+
+def test_lint_package_imports_and_runs_without_jax():
+    proc = subprocess.run([sys.executable, "-c", _JAXFREE_SCRIPT],
+                          cwd=REPO, env=_env(), capture_output=True,
+                          text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip().endswith("ok")
