@@ -41,7 +41,14 @@ Claims asserted (deterministic under the fixed seed):
 * **coldest-cache victim selection** strictly reduces
   ``prefix_tokens_lost`` vs least-outstanding under an identical scripted
   scale-in schedule on the shared-prefix ``sessions`` workload (Zipf
-  prefix groups): warm state is part of what a shrink decision spends.
+  prefix groups): warm state is part of what a shrink decision spends;
+* **fault resilience** (DESIGN.md 11): one replica limping x16 behind a
+  signal blackout at 2x saturation collapses blind routing (>= 30%
+  goodput loss - the frozen rosy gauges keep attracting arrivals) while
+  health-aware ejection from the SAME published signals holds within
+  <= 10% of the no-fault run, and hedged requests rescue >= 10% goodput
+  on a crash/restart run vs unhedged; copy-space conservation holds on
+  every faulted run.
 
 Grid points are independent (seed x config x policy) pure functions, so
 every sweep here is declared as ``scale_bench.GridPoint`` rows and
@@ -60,8 +67,10 @@ from typing import List, Optional, Tuple
 
 import dataclasses
 
-from repro.cluster import (FleetConfig, ScaleDecision, SLOAutoscaler,
-                           WorkloadSpec, assert_conserved, conserved_count,
+from repro.cluster import (Blackout, Crash, FaultSchedule, FleetConfig,
+                           HealthPolicy, HedgePolicy, Limplock,
+                           ScaleDecision, SLOAutoscaler, WorkloadSpec,
+                           assert_conserved, conserved_count,
                            detect_collapse_onset, est_capacity_rps,
                            knee_cost, make_workload, pod_skewed_diurnal,
                            run_fleet, select_victim, sessions)
@@ -688,16 +697,101 @@ def victim_selection(smoke: bool = False,
     return rows
 
 
+def fault_resilience(smoke: bool = False,
+                     jobs: Optional[int] = None) -> List[Row]:
+    """Limplock + signal blackout at 2x saturation: blind vs
+    health-aware routing, plus hedged-requests crash rescue.
+
+    The scenario the fault plane exists for (DESIGN.md 11): replica 0
+    silently limps (step cost x16) behind a signal blackout, so its
+    published gauges FREEZE at a rosy pre-fault snapshot - ``gcr_aware``
+    keeps scoring the frozen report attractive and pours arrivals into
+    the sick replica for the whole window.  Three runs, identical
+    workload/seed, asserted deterministically (same config in --smoke
+    and full: this is a targeted scenario, seconds either way, like
+    ``victim_selection``):
+
+    * **blind** (health=None) loses >= 30% of the no-fault goodput;
+    * **health-aware** (stale-gauge ejection on the same published
+      signals) holds within <= 10% of the no-fault run;
+    * a crash/restart run with **hedged requests** beats the unhedged
+      crash run by >= 10% goodput (the hedge twin lands on a healthy
+      replica while the requeued original waits out the cold restart);
+    * copy-space conservation holds on every faulted run.
+    """
+    del smoke                     # same deterministic scenario both modes
+    n_replicas, limit, duration_ms = 3, 32, 2_000.0
+    spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
+                        n_pods=N_PODS)
+    cost = knee_cost(spec, limit, oversub=HBM_OVERSUB)
+    cap = est_capacity_rps(spec, limit, n_replicas, cost)
+    t0, t1 = 0.02 * duration_ms, 0.7 * duration_ms
+    limp = FaultSchedule(limplocks=[Limplock(0, t0, t1, factor=16.0)],
+                         blackouts=[Blackout(0, t0, t1)])
+    crash = FaultSchedule(crashes=[Crash(1, 0.2 * duration_ms,
+                                         restart_ms=0.6 * duration_ms)])
+
+    def point(tag, **kw):
+        return GridPoint(tag=tag, workload="poisson", rps=2.0 * cap,
+                         duration_ms=duration_ms, seed=SEED,
+                         router="gcr_aware", admission="gcr",
+                         n_replicas=n_replicas, active_limit=limit,
+                         n_pods=N_PODS, prompt_range=spec.prompt_range,
+                         gen_range=spec.gen_range, oversub=HBM_OVERSUB,
+                         prefix_cache_tokens=60_000, max_ms=90_000.0,
+                         router_seed=1, staleness_ms=60.0, jitter_ms=5.0,
+                         **kw)
+
+    grid = [point("clean"),
+            point("blind", faults=limp),
+            point("aware", faults=limp,
+                  health=HealthPolicy(stale_ms=150.0)),
+            point("crash", faults=crash),
+            point("crash_hedged", faults=crash,
+                  hedge=HedgePolicy(delay_ms=500.0))]
+    clean, blind, aware, unhedged, hedged = run_grid(grid, jobs)
+
+    rows: List[Row] = []
+    for name, res in (("clean", clean), ("blind", blind),
+                      ("aware", aware), ("crash", unhedged),
+                      ("crash_hedged", hedged)):
+        assert_conserved(res, f"faults/{name}")
+        rows.append((f"cluster/faults/{name}_goodput_tok_s",
+                     res.goodput_tok_s, ""))
+    blind_loss = 1.0 - blind.goodput_tok_s / clean.goodput_tok_s
+    aware_loss = 1.0 - aware.goodput_tok_s / clean.goodput_tok_s
+    hedge_gain = hedged.goodput_tok_s / max(unhedged.goodput_tok_s, 1e-9)
+    rows.append(("cluster/claims/limplock_blind_loss", blind_loss, ""))
+    rows.append(("cluster/claims/limplock_aware_loss", aware_loss, ""))
+    rows.append(("cluster/claims/crash_hedge_gain", hedge_gain, ""))
+    rows.append(("cluster/faults/aware_ejections",
+                 aware.stats["ejections"], ""))
+    rows.append(("cluster/faults/hedges_issued",
+                 hedged.stats["hedges_issued"], ""))
+    assert blind_loss >= 0.30, \
+        (f"one limping replica behind a blackout should collapse blind "
+         f"routing: lost only {blind_loss:.1%}")
+    assert aware_loss <= 0.10, \
+        (f"health-aware routing should hold within 10% of no-fault: "
+         f"lost {aware_loss:.1%}")
+    assert aware.stats["ejections"] >= 1, "the sick replica was never culled"
+    assert hedge_gain >= 1.10, \
+        (f"hedged crash run should rescue >= 10% goodput vs unhedged: "
+         f"got {hedge_gain:.3f}x")
+    return rows
+
+
 def control_plane(smoke: bool = False,
                   jobs: Optional[int] = None) -> List[Row]:
-    """Staleness + autoscaling + heterogeneity + affinity + topology
-    scenarios as one suite (all of it runs in --smoke too, so CI asserts
-    every claim)."""
+    """Staleness + autoscaling + heterogeneity + affinity + topology +
+    fault-resilience scenarios as one suite (all of it runs in --smoke
+    too, so CI asserts every claim)."""
     return (staleness_resilience(smoke, jobs) + slo_scaling(smoke, jobs)
             + heterogeneous_pool(smoke, jobs)
             + session_affinity(smoke, jobs)
             + pod_scoped_scaling(smoke, jobs)
-            + victim_selection(smoke, jobs))
+            + victim_selection(smoke, jobs)
+            + fault_resilience(smoke, jobs))
 
 
 def main() -> None:

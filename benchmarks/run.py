@@ -69,6 +69,7 @@ def _suites():
         ("cluster", cluster_bench.cluster_collapse),
         ("cluster_onset", cluster_bench.collapse_onset),
         ("cluster_ctrl", cluster_bench.control_plane),
+        ("faults", cluster_bench.fault_resilience),
         ("scale", scale_bench.scale_sweep),
         ("roofline", roofline.roofline_rows),
         ("dryrun", roofline.summary),

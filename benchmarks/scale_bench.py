@@ -42,7 +42,8 @@ import os
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from repro.cluster import (FleetConfig, Observability, SLOAutoscaler,
+from repro.cluster import (FaultSchedule, FleetConfig, HealthPolicy,
+                           HedgePolicy, Observability, SLOAutoscaler,
                            WorkloadSpec, assert_conserved, est_capacity_rps,
                            knee_cost, make_workload, run_fleet, sessions)
 from repro.cluster.telemetry import ClusterResult
@@ -91,6 +92,11 @@ class GridPoint:
     #                               ClusterResult.windows (obs layer,
     #                               metrics only - spans/flight stay off
     #                               so points remain cheap and picklable)
+    # fault plane (cluster.faults): frozen dataclasses, so a faulted
+    # point pickles to the pool exactly like a clean one
+    faults: Optional[FaultSchedule] = None
+    health: Optional[HealthPolicy] = None
+    hedge: Optional[HedgePolicy] = None
 
     def spec(self) -> WorkloadSpec:
         return WorkloadSpec(prompt_range=self.prompt_range,
@@ -143,7 +149,8 @@ def run_point(pt: GridPoint) -> ClusterResult:
                      signal_seed=pt.signal_seed, autoscale=autoscale,
                      max_replicas=pt.max_replicas,
                      rps_per_replica=pt.rps_per_replica,
-                     router_seed=pt.router_seed, obs=obs)
+                     router_seed=pt.router_seed, obs=obs,
+                     faults=pt.faults, health=pt.health, hedge=pt.hedge)
 
 
 _POOL = None

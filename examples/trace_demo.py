@@ -21,17 +21,18 @@ Usage:  PYTHONPATH=src python examples/trace_demo.py [--smoke] [--out DIR]
 import argparse
 import os
 
-from repro.cluster import (FleetConfig, Observability, WorkloadSpec,
-                           est_capacity_rps, knee_cost, make_workload,
-                           run_fleet)
+from repro.cluster import (Blackout, Crash, FaultSchedule, FleetConfig,
+                           HealthPolicy, HedgePolicy, Limplock,
+                           Observability, WorkloadSpec, est_capacity_rps,
+                           knee_cost, make_workload, run_fleet)
 
 WINDOW_MS = 250.0
 
 
-def run_traced(tag, router, admission, reqs, cfg, out_dir):
+def run_traced(tag, router, admission, reqs, cfg, out_dir, **kw):
     obs = Observability(window_ms=WINDOW_MS)
     res = run_fleet(reqs, router, cfg, max_ms=60_000.0, router_seed=1,
-                    obs=obs)
+                    obs=obs, **kw)
     print(f"\n== {tag} ({router}/{admission}) ==")
     print(res.summary())
 
@@ -101,6 +102,26 @@ def main() -> None:
     assert aware is None, "restricted fleet should hold its goodput"
     print("\ncollapse onset found for the blind fleet only - restricting "
           "concurrency is what removes it.")
+
+    # fault-injection run (DESIGN.md 11): replica 0 limps x16 behind a
+    # signal blackout, replica 1 crashes and cold-restarts; health-aware
+    # ejection + hedged requests respond.  The exported trace shows the
+    # fault/eject/restore flight events and hedge/cancel spans.
+    t0, t1 = 0.02 * duration_ms, 0.7 * duration_ms
+    faults = FaultSchedule(
+        limplocks=[Limplock(0, t0, t1, factor=16.0)],
+        blackouts=[Blackout(0, t0, t1)],
+        crashes=[Crash(1, 0.2 * duration_ms,
+                       restart_ms=0.6 * duration_ms)])
+    run_traced(
+        "faulted", "gcr_aware", "gcr", reqs,
+        FleetConfig(n_replicas=n_replicas, admission="gcr",
+                    active_limit=limit, n_pods=2, cost=cost), args.out,
+        staleness_ms=60.0, jitter_ms=5.0, faults=faults,
+        health=HealthPolicy(stale_ms=150.0),
+        hedge=HedgePolicy(delay_ms=500.0))
+    print("\nfaulted run traced - eject/restore and hedge/cancel events "
+          "are in the flight log and span stream.")
 
 
 if __name__ == "__main__":

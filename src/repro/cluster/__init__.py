@@ -16,6 +16,8 @@ onset detection (``obs``).
 from .controller import (VICTIM_POLICIES, MigrationCost,
                          QueueDepthAutoscaler, ScaleDecision, SLOAutoscaler,
                          make_autoscaler, select_victim, victim_scores)
+from .faults import (Blackout, Crash, FaultSchedule, HealthEstimator,
+                     HealthPolicy, HedgePolicy, Limplock)
 from .fleet import (Fleet, FleetConfig, est_capacity_rps, knee_cost,
                     run_fleet)
 from .invariants import (PlacementGuard, assert_conserved,
@@ -48,6 +50,13 @@ __all__ = [
     "select_victim",
     "victim_scores",
     "make_autoscaler",
+    "FaultSchedule",
+    "Limplock",
+    "Crash",
+    "Blackout",
+    "HedgePolicy",
+    "HealthPolicy",
+    "HealthEstimator",
     "Observability",
     "SpanTracer",
     "FlightRecorder",

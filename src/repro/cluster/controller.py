@@ -91,26 +91,40 @@ VICTIM_POLICIES = ("least_outstanding", "coldest_cache")
 
 
 def victim_scores(policy: str, reports: Sequence[ReplicaReport],
-                  live: Sequence[int]) -> List[tuple]:
+                  live: Sequence[int],
+                  ejected: Sequence[int] = ()) -> List[tuple]:
     """Per-candidate sort key of a victim policy, lowest key retires.
 
     This is the *rationale* behind ``select_victim`` - the flight
     recorder (``obs.FlightRecorder``) logs it per scale-in decision so a
     retirement can be root-caused from the trace alone.  The keys are
     exactly the tuples ``select_victim`` minimizes, so the logged
-    rationale can never drift from the decision."""
+    rationale can never drift from the decision.
+
+    ``ejected`` (the health plane's outlier set, Malthusian "cull the
+    sick") prepends a membership flag to every key: an ejected replica
+    sorts before any healthy one, so a scale-in preferentially retires
+    the replica routing already wrote off.  Empty ``ejected`` returns
+    the legacy keys unchanged."""
     if policy == "coldest_cache":
-        return [(reports[j].cache_tokens, reports[j].outstanding, live[j])
+        keys = [(reports[j].cache_tokens, reports[j].outstanding, live[j])
                 for j in range(len(live))]
-    if policy == "least_outstanding" or policy == "":
-        return [(reports[j].outstanding, live[j])
+    elif policy == "least_outstanding" or policy == "":
+        keys = [(reports[j].outstanding, live[j])
                 for j in range(len(live))]
-    raise ValueError(f"unknown victim policy {policy!r} "
-                     f"(want one of {VICTIM_POLICIES})")
+    else:
+        raise ValueError(f"unknown victim policy {policy!r} "
+                         f"(want one of {VICTIM_POLICIES})")
+    if ejected:
+        sick = frozenset(ejected)
+        keys = [((0 if live[j] in sick else 1,) + keys[j])
+                for j in range(len(live))]
+    return keys
 
 
 def select_victim(policy: str, reports: Sequence[ReplicaReport],
-                  live: Sequence[int]) -> int:
+                  live: Sequence[int],
+                  ejected: Sequence[int] = ()) -> int:
     """Position in ``live`` of the replica a scale-in should retire.
 
     ``least_outstanding`` is the legacy rule (fewest unfinished streams,
@@ -122,9 +136,11 @@ def select_victim(policy: str, reports: Sequence[ReplicaReport],
     already worthless - this is what turns ``prefix_tokens_lost`` from
     an after-the-fact counter into an input of the decision.  Reports
     come off the signal bus, so victim selection is exactly as stale as
-    every other control-plane read.
+    every other control-plane read.  A non-empty ``ejected`` set makes
+    health-ejected replicas the preferred victims (see
+    ``victim_scores``).
     """
-    keys = victim_scores(policy, reports, live)
+    keys = victim_scores(policy, reports, live, ejected)
     return min(range(len(live)), key=keys.__getitem__)
 
 
@@ -385,7 +401,8 @@ class SLOAutoscaler(_SingleFleet):
         if n > self.min_replicas \
                 and now_ms - self._last_in >= self.cooldown_in_ms \
                 and now_ms - self._last_out >= self.cooldown_in_ms:
-            k = select_victim(self.victim, reports, live)
+            k = select_victim(self.victim, reports, live,
+                              getattr(fleet, "ejected", ()))
             rest = sum(limits) - limits[k]
             drained = (parked == 0 and att >= self.target_attainment
                        and active <= self.scale_in_util * rest)
@@ -477,7 +494,8 @@ class SLOAutoscaler(_SingleFleet):
                 # the last-published store IS the victim's signal - no
                 # second capture pass
                 reports = [fleet.bus.reports[i] for i in pv.replicas]
-                k = select_victim(self.victim, reports, pv.replicas)
+                k = select_victim(self.victim, reports, pv.replicas,
+                                  getattr(fleet, "ejected", ()))
                 limits = [r.active_limit if r.active_limit is not None
                           else self.cfg.active_limit for r in reports]
                 rest = sum(limits) - limits[k]

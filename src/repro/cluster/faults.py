@@ -1,0 +1,309 @@
+"""Fault injection and health response for the fleet loop (DESIGN.md 11).
+
+Production fleets are mostly *partially* sick: the dangerous replica is
+not the one that is gone but the one that is slow while its monitoring
+still looks healthy (the "limplock").  GCR (arXiv 1905.10818) restricts
+concurrency into a resource's *actual* capacity, and Malthusian Locks
+(arXiv 1511.06035) shows that culling excess participants is what
+prevents collapse; the fleet-level analogue modeled here is a router
+that ejects limping replicas whose stale published gauges still look
+rosy.
+
+Three declarative fault kinds, scheduled in virtual time:
+
+* ``Limplock``  - a replica's step cost silently inflates by ``factor``
+  over ``[start_ms, end_ms)``.  Only the *latency* terms of its
+  ``StepCostModel`` scale; KV geometry (``kv_bytes_per_tok``,
+  ``hbm_budget``) is untouched, so every published gauge keeps its
+  healthy meaning - the sickness is invisible except through time.
+* ``Crash``     - the replica drops at ``at_ms``: in-flight streams are
+  re-queued through the migration path or lost per ``policy``, its
+  prefix cache dies, and (if ``restart_ms`` is set) it rejoins later
+  with a cold cache.
+* ``Blackout``  - the replica's publishes stop over ``[start_ms,
+  end_ms)``; routers reading the bus see a frozen report whose
+  ``age_ms`` only grows.  Paired with a limplock this is the classic
+  blackhole: the frozen pre-fault report stays rosy while the replica
+  crawls, and any router that trusts it routes traffic into a pit.
+
+The response side is ``HealthPolicy``/``HealthEstimator``: a
+publish-time EWMA of each replica's published completion *rate*
+compared against the pool median, plus a staleness discount on
+``ReplicaView.age_ms`` (a report nobody refreshes is not evidence of
+health).  The estimator is deterministic - no RNG, evaluated only at
+publish events, ties broken by replica index - and the fleet filters
+its routable view list by the ejected set, so all six router policies
+opt in through one seam.  ``HedgePolicy`` adds duplicate-issue
+hedging: a request still unfinished ``delay_ms`` after its first route
+is cloned onto a different replica, first completion wins, and the
+loser is cancelled (``invariants.conserved_count`` extends request
+conservation to the copy space).
+
+**Zero-perturbation contract** (pinned by ``tests/test_faults.py``):
+an empty ``FaultSchedule`` and ``health=None``/``hedge=None`` push no
+events, consume no tie-break sequence numbers, and leave every seeded
+trace bit-identical to a run without the feature - the same opt-in
+rule as ``obs=``.  Everything here is a frozen dataclass of plain
+data, so schedules pickle cleanly into ``benchmarks`` grid points.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["Limplock", "Crash", "Blackout", "FaultSchedule",
+           "HedgePolicy", "HealthPolicy", "HealthEstimator"]
+
+
+# ---------------------------------------------------------------------------
+# declarative fault kinds
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Limplock:
+    """Silent slowdown: step latency terms x ``factor`` over a window."""
+
+    replica: int
+    start_ms: float
+    end_ms: float
+    factor: float = 8.0
+
+    def __post_init__(self) -> None:
+        if self.replica < 0:
+            raise ValueError("Limplock.replica must be >= 0")
+        if not 0.0 <= self.start_ms < self.end_ms:
+            raise ValueError("Limplock window needs 0 <= start_ms < end_ms")
+        if self.factor <= 1.0:
+            raise ValueError("Limplock.factor must be > 1 (it inflates)")
+
+
+@dataclass(frozen=True)
+class Crash:
+    """Replica death at ``at_ms``; optional rejoin at ``restart_ms``.
+
+    ``policy`` decides the fate of unfinished streams: ``"requeue"``
+    sends them back through the router via the migration path (cold -
+    a crash checkpoints nothing, so requeued streams restart decode
+    from token zero), ``"lose"`` drops them (counted in
+    ``stats["lost"]``; conservation still balances).
+    """
+
+    replica: int
+    at_ms: float
+    restart_ms: Optional[float] = None
+    policy: str = "requeue"
+
+    def __post_init__(self) -> None:
+        if self.replica < 0:
+            raise ValueError("Crash.replica must be >= 0")
+        if self.at_ms < 0.0:
+            raise ValueError("Crash.at_ms must be >= 0")
+        if self.restart_ms is not None and self.restart_ms <= self.at_ms:
+            raise ValueError("Crash.restart_ms must be > at_ms")
+        if self.policy not in ("requeue", "lose"):
+            raise ValueError(f"Crash.policy {self.policy!r} not in "
+                             "('requeue', 'lose')")
+
+
+@dataclass(frozen=True)
+class Blackout:
+    """Publish silence over ``[start_ms, end_ms)``: the bus keeps the
+    last report and routers watch its ``age_ms`` grow."""
+
+    replica: int
+    start_ms: float
+    end_ms: float
+
+    def __post_init__(self) -> None:
+        if self.replica < 0:
+            raise ValueError("Blackout.replica must be >= 0")
+        if not 0.0 <= self.start_ms < self.end_ms:
+            raise ValueError("Blackout window needs 0 <= start_ms < end_ms")
+
+
+# fixed op order at equal virtual time: off-edges release before
+# on-edges grab, restarts land before a same-instant crash
+_OP_ORDER = {"limp_off": 0, "black_off": 1, "restart": 2,
+             "crash": 3, "limp_on": 4, "black_on": 5}
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """The declarative fault plan one fleet run executes.
+
+    Empty (the default) is the zero-perturbation case: ``events()``
+    yields nothing and the run is bit-identical to ``faults=None``.
+    """
+
+    limplocks: Tuple[Limplock, ...] = ()
+    crashes: Tuple[Crash, ...] = ()
+    blackouts: Tuple[Blackout, ...] = ()
+
+    def __post_init__(self) -> None:
+        # tolerate lists in hand-written schedules; store plain tuples
+        object.__setattr__(self, "limplocks", tuple(self.limplocks))
+        object.__setattr__(self, "crashes", tuple(self.crashes))
+        object.__setattr__(self, "blackouts", tuple(self.blackouts))
+
+    def __bool__(self) -> bool:
+        return bool(self.limplocks or self.crashes or self.blackouts)
+
+    def events(self) -> List[Tuple[float, str, object]]:
+        """Time-ordered ``(t_ms, op, fault)`` edges for the event heap.
+
+        Blackout edges are included for the flight recorder's benefit
+        only - the publish branch consults ``blackout_windows()``
+        directly, so a blackout needs no state transition to act."""
+        evs: List[Tuple[float, str, object]] = []
+        for lp in self.limplocks:
+            evs.append((lp.start_ms, "limp_on", lp))
+            evs.append((lp.end_ms, "limp_off", lp))
+        for cr in self.crashes:
+            evs.append((cr.at_ms, "crash", cr))
+            if cr.restart_ms is not None:
+                evs.append((cr.restart_ms, "restart", cr))
+        for bo in self.blackouts:
+            evs.append((bo.start_ms, "black_on", bo))
+            evs.append((bo.end_ms, "black_off", bo))
+        evs.sort(key=lambda e: (e[0], _OP_ORDER[e[1]], e[2].replica))
+        return evs
+
+    def blackout_windows(self) -> Dict[int, Tuple[Tuple[float, float], ...]]:
+        """Per-replica ``((start_ms, end_ms), ...)`` silence windows."""
+        by_rep: Dict[int, List[Tuple[float, float]]] = {}
+        for bo in self.blackouts:
+            by_rep.setdefault(bo.replica, []).append(
+                (bo.start_ms, bo.end_ms))
+        return {i: tuple(sorted(w)) for i, w in by_rep.items()}
+
+
+# ---------------------------------------------------------------------------
+# response policies
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HedgePolicy:
+    """Duplicate-issue hedging: a request unfinished ``delay_ms`` after
+    its first route is cloned onto a different replica; the first copy
+    to complete wins and the other is cancelled.  ``max_hedges`` bounds
+    clones per request (one is the classic tail-tolerance setting)."""
+
+    delay_ms: float = 400.0
+    max_hedges: int = 1
+
+    def __post_init__(self) -> None:
+        if self.delay_ms <= 0.0:
+            raise ValueError("HedgePolicy.delay_ms must be > 0")
+        if self.max_hedges < 1:
+            raise ValueError("HedgePolicy.max_hedges must be >= 1")
+
+
+@dataclass(frozen=True)
+class HealthPolicy:
+    """Outlier-ejection thresholds for ``HealthEstimator``.
+
+    A replica is ejected from the routable set when its EWMA published
+    completion rate falls below ``rate_frac`` of the pool median (after
+    ``min_reports`` rate samples), or when its report is older than
+    ``stale_ms`` (0 disables the staleness check).  ``max_eject_frac``
+    caps the ejected share of the live pool - the estimator never
+    ejects everyone, mirroring GCR's rule that someone must hold the
+    lock."""
+
+    ewma_alpha: float = 0.3
+    rate_frac: float = 0.5
+    min_reports: int = 3
+    stale_ms: float = 0.0
+    max_eject_frac: float = 0.5
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("HealthPolicy.ewma_alpha must be in (0, 1]")
+        if not 0.0 < self.rate_frac < 1.0:
+            raise ValueError("HealthPolicy.rate_frac must be in (0, 1)")
+        if self.min_reports < 1:
+            raise ValueError("HealthPolicy.min_reports must be >= 1")
+        if self.stale_ms < 0.0:
+            raise ValueError("HealthPolicy.stale_ms must be >= 0")
+        if not 0.0 < self.max_eject_frac < 1.0:
+            raise ValueError("HealthPolicy.max_eject_frac must be in (0, 1)")
+
+
+class HealthEstimator:
+    """Deterministic publish-time outlier detector over bus reports.
+
+    State updates happen only at publish events (``observe``), and the
+    ejected set is recomputed from scratch at each evaluation
+    (``evaluate``) - a replica that starts publishing healthy numbers
+    again is restored automatically.  No RNG anywhere; every ranking
+    ties off by replica index, so a fixed seed gives a fixed ejection
+    trace.  Requires a periodic bus (``staleness_ms > 0``): the live
+    bus has no publish events to hang observations on.
+    """
+
+    __slots__ = ("policy", "ejected", "_last", "_ewma", "_n")
+
+    def __init__(self, policy: HealthPolicy) -> None:
+        self.policy = policy
+        self.ejected: frozenset = frozenset()
+        self._last: Dict[int, Tuple[float, int]] = {}   # idx -> (t, done)
+        self._ewma: Dict[int, float] = {}
+        self._n: Dict[int, int] = {}                    # rate samples seen
+
+    def observe(self, idx: int, report, t_ms: float) -> None:
+        """Fold replica ``idx``'s fresh publish into its EWMA rate."""
+        prev = self._last.get(idx)
+        self._last[idx] = (t_ms, report.completed)
+        if prev is None:
+            return
+        dt = t_ms - prev[0]
+        if dt <= 0.0:
+            return
+        rate = (report.completed - prev[1]) / dt * 1e3   # completions/s
+        a = self.policy.ewma_alpha
+        old = self._ewma.get(idx)
+        self._ewma[idx] = rate if old is None else a * rate + (1 - a) * old
+        self._n[idx] = self._n.get(idx, 0) + 1
+
+    def forget(self, idx: int) -> None:
+        """Drop replica ``idx``'s rate history (crash/restart boundary):
+        the first post-restart sample would otherwise span the downtime
+        gap and eject the cold rejoiner on sight."""
+        self._last.pop(idx, None)
+        self._ewma.pop(idx, None)
+        self._n.pop(idx, None)
+
+    def evaluate(self, t_ms: float, reports: Sequence,
+                 live: Sequence[int]) -> Tuple[Tuple[int, ...],
+                                               Tuple[int, ...]]:
+        """Recompute the ejected set; returns ``(ejected, restored)``
+        deltas relative to the previous evaluation."""
+        p = self.policy
+        stale: List[int] = []
+        judged: List[int] = []
+        if p.stale_ms > 0.0:
+            stale = [i for i in live
+                     if t_ms - reports[i].t_ms > p.stale_ms]
+        stale_set = frozenset(stale)
+        judged = [i for i in live
+                  if i not in stale_set and self._n.get(i, 0)
+                  >= p.min_reports]
+        slow: List[int] = []
+        if len(judged) >= 2:
+            rates = sorted(self._ewma[i] for i in judged)
+            mid = len(rates) // 2
+            median = (rates[mid] if len(rates) % 2
+                      else 0.5 * (rates[mid - 1] + rates[mid]))
+            if median > 0.0:
+                floor = p.rate_frac * median
+                slow = [i for i in judged if self._ewma[i] < floor]
+        # rank the accused: stalest report first, then slowest EWMA,
+        # index breaking every tie; cap so someone always serves
+        stale.sort(key=lambda i: (reports[i].t_ms, i))
+        slow.sort(key=lambda i: (self._ewma[i], i))
+        cap = min(int(p.max_eject_frac * len(live)), len(live) - 1)
+        new = frozenset((stale + slow)[:max(cap, 0)])
+        old = self.ejected
+        self.ejected = new
+        return (tuple(sorted(new - old)), tuple(sorted(old - new)))

@@ -43,12 +43,14 @@ import dataclasses
 import heapq
 import itertools
 from dataclasses import dataclass
+from operator import attrgetter
 from typing import Callable, List, Optional, Sequence, Union
 
 from ..serving.engine import (PrefixCache, Request, SimServeEngine,
                               StepCostModel, make_admission)
 from .controller import (MigrationCost, QueueDepthAutoscaler, ScaleDecision,
                          SLOAutoscaler, make_autoscaler)
+from .faults import FaultSchedule, HealthEstimator, HealthPolicy, HedgePolicy
 from .router import Router, make_router
 from .signals import ReplicaView, SignalBus
 from .telemetry import ClusterResult, ClusterTelemetry, SLO
@@ -58,6 +60,16 @@ from .workload import WorkloadSpec
 __all__ = ["Fleet", "FleetConfig", "FleetTopology", "QueueDepthAutoscaler",
            "SLOAutoscaler", "ScaleDecision", "MigrationCost", "knee_cost",
            "est_capacity_rps", "run_fleet"]
+
+
+def _in_window(wins, t: float) -> bool:
+    """True when ``t`` falls inside any ``(start, end)`` half-open window
+    of ``wins`` (None = no windows)."""
+    if wins:
+        for s, e in wins:
+            if s <= t < e:
+                return True
+    return False
 
 
 def knee_cost(spec: WorkloadSpec, active_limit: int,
@@ -143,7 +155,9 @@ class Fleet:
                  bus: Optional[SignalBus] = None,
                  migration: Optional[MigrationCost] = None,
                  topology: Optional[FleetTopology] = None,
-                 obs=None) -> None:
+                 obs=None, faults: Optional[FaultSchedule] = None,
+                 health: Optional[HealthPolicy] = None,
+                 hedge: Optional[HedgePolicy] = None) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
         self.replicas = replicas
@@ -163,7 +177,31 @@ class Fleet:
         # recorder + windowed metrics.  None (the default) is the
         # zero-overhead path - every hook below guards on it
         self.obs = obs
+        # fault plane (DESIGN.md 11): all three knobs share the obs=
+        # opt-in contract - None (or an *empty* schedule) pushes no
+        # events, consumes no tie-break sequence numbers, and leaves
+        # seeded traces bit-identical
+        self.faults = faults if faults else None
+        self.health = (health if isinstance(health, HealthEstimator)
+                       else HealthEstimator(health)
+                       if health is not None else None)
+        if self.health is not None and (bus is None or bus.live):
+            raise ValueError(
+                "health ejection needs a periodic SignalBus "
+                "(staleness_ms > 0): the estimator observes completion "
+                "rates at publish events, and a live bus has none")
+        self.hedge = hedge
         self.retired = [False] * len(replicas)
+        self._blackouts = (self.faults.blackout_windows()
+                          if self.faults is not None else {})
+        self._crashed: dict = {}           # idx -> True while down
+        self._limp_saved: dict = {}        # idx -> pre-fault StepCostModel
+        self._pub_alive: List[bool] = []   # publish chain in the heap?
+        # hedge copy registry: rid -> {"copies": [[obj, status], ...],
+        # "issued": n}; statuses live/cancel_pending/done/cancelled/lost
+        self._hedges: dict = {}
+        self._hedges_issued = 0
+        self._cancelled_hedges = 0
         # event-loop state (created in run())
         self._heap: list = []
         self._arrivals: List[Request] = []
@@ -174,7 +212,17 @@ class Fleet:
         self._migrating = 0     # streams in KV transit between replicas
         self._events = 0        # total events processed (perf telemetry)
         self._live_views: List[ReplicaView] = []
+        # the list routers actually see: identical OBJECT to _live_views
+        # when health is off, a health-filtered copy otherwise
+        self._route_views: List[ReplicaView] = self._live_views
         self._ran = False
+
+    @property
+    def ejected(self) -> frozenset:
+        """Replica indices the health estimator currently holds out of
+        the routable set (empty without a health policy)."""
+        h = self.health
+        return h.ejected if h is not None else frozenset()
 
     # -- introspection -------------------------------------------------------
     def live_indices(self) -> List[int]:
@@ -188,6 +236,20 @@ class Fleet:
     def _rebuild_live_views(self) -> None:
         views = self.bus.views
         self._live_views = [views[i] for i in self.live_indices()]
+        self._refilter_route_views()
+
+    def _refilter_route_views(self) -> None:
+        """Routable = live minus health-ejected; never empty (someone
+        must serve, mirroring GCR's someone-holds-the-lock rule).  With
+        health off the routable list IS the live list - same object, so
+        the health seam costs existing runs nothing."""
+        h = self.health
+        if h is None or not h.ejected:
+            self._route_views = self._live_views
+        else:
+            ej = h.ejected
+            kept = [v for v in self._live_views if v.idx not in ej]
+            self._route_views = kept or self._live_views
 
     # -- event plumbing ------------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -214,6 +276,7 @@ class Fleet:
         if self.obs is not None:
             self.obs.on_spawn(idx, t, eng, pod)
         self._rebuild_live_views()
+        self._pub_alive.append(not self.bus.live)
         if not self.bus.live:
             self._push(self.bus.next_publish_ms(t), "publish", idx)
 
@@ -257,6 +320,237 @@ class Fleet:
             idx, done_t, migrated=len(active_moved) + len(parked_moved),
             prefix_tokens_lost=lost)
 
+    # -- fault plane (DESIGN.md 11) ------------------------------------------
+    def _kick(self, idx: int, t: float) -> None:
+        """Start a decode step on an idle replica (hedge/cancel paths
+        mutate engine occupancy outside the arrive branch, which owns
+        the inline kick on the hot path)."""
+        eng = self.replicas[idx]
+        if self._stepping[idx] or self.retired[idx] or not eng.active:
+            return
+        dt, done = eng.step(t)
+        if dt > 0.0:
+            end_t = t + dt
+            self._stepping[idx] = True
+            self._step_end[idx] = end_t
+            self._push(end_t, "step", idx)
+        if done:
+            if self.obs is not None:
+                self.obs.on_completions(done, idx)
+            self._resolve_hedges(done, t)
+
+    def _apply_fault(self, op: str, f, t: float) -> None:
+        idx = f.replica
+        if idx >= len(self.replicas):
+            return          # schedule names a replica this run never built
+        if op == "limp_on":
+            # swap in a cost model with every *latency* term inflated;
+            # KV geometry is untouched, so occupancy gauges keep their
+            # healthy meaning - the sickness is visible only as time.
+            # Steps already in flight keep their banked end (effects
+            # bank at step start); the next step pays the factor.
+            if idx not in self._limp_saved:
+                eng = self.replicas[idx]
+                c = eng.cost
+                self._limp_saved[idx] = c
+                k = f.factor
+                eng.cost = dataclasses.replace(
+                    c, t_fixed_ms=c.t_fixed_ms * k, t_tok_ms=c.t_tok_ms * k,
+                    thrash_coef=c.thrash_coef * k,
+                    t_xpod_ms=c.t_xpod_ms * k,
+                    t_prefill_ms_per_tok=c.t_prefill_ms_per_tok * k)
+        elif op == "limp_off":
+            saved = self._limp_saved.pop(idx, None)
+            if saved is not None:
+                self.replicas[idx].cost = saved
+        elif op == "crash":
+            self._crash(idx, t, f)
+            return          # _crash logs its own richer fault record
+        elif op == "restart":
+            self._restart(idx, t)
+        # black_on / black_off mutate nothing: the publish branch reads
+        # the windows directly; the edges exist so the flight recorder
+        # can show when the silence started and ended
+        self.telemetry.on_fault(op, idx, t)
+        if self.obs is not None:
+            self.obs.on_fault(idx, t, op)
+
+    def _crash(self, idx: int, t: float, f) -> None:
+        if self.retired[idx] or len(self.live_indices()) <= 1:
+            return          # already gone, or someone must keep serving
+        self.retired[idx] = True
+        self._crashed[idx] = True
+        self._rebuild_live_views()
+        # no farewell publish: a crash is silent - the bus keeps the
+        # stale pre-crash report and routers watch its age grow
+        done_t = self._step_end[idx] if self._stepping[idx] else t
+        eng = self.replicas[idx]
+        active_moved, parked_moved = eng.drain()
+        kv = eng.cost.kv_bytes_per_tok
+        pc = eng.prefix_cache
+        lost_prefix = (pc.tokens if pc else 0) + sum(
+            r.prefix_hit_tokens for r in active_moved + parked_moved
+            if r.first_token_ms < 0)
+        if pc is not None:
+            pc.clear()      # the warm KV dies with the process
+        moved = active_moved + parked_moved
+        requeued = lost = 0
+        if f.policy == "requeue":
+            # a crash checkpoints nothing: every survivor restarts
+            # decode from token zero elsewhere, paying only the
+            # control-plane handoff (there is no KV left to transfer).
+            # Banked step effects stand, so active streams re-enter at
+            # the in-flight step's end, never before it.
+            handoff = self.migration.ms(0, kv)
+            for r in active_moved:
+                self._push(done_t + handoff, "migrate",
+                           self._requeue_copy(r))
+            for r in parked_moved:
+                self._push(t + handoff, "migrate", self._requeue_copy(r))
+            self._migrating += len(moved)
+            requeued = len(moved)
+        else:
+            lost = len(moved)
+            for r in moved:
+                reg = self._hedges.get(r.rid)
+                if reg is not None:
+                    for rec in reg["copies"]:
+                        if rec[0] is r:
+                            rec[1] = "lost"
+        self.telemetry.on_crash(idx, done_t, requeued=requeued, lost=lost,
+                                prefix_tokens_lost=lost_prefix)
+        if self.obs is not None:
+            self.obs.on_fault(idx, t, "crash", requeued=requeued, lost=lost,
+                              moved=[(r, done_t) for r in active_moved]
+                              + [(r, t) for r in parked_moved]
+                              if f.policy == "requeue" else ())
+
+    def _requeue_copy(self, r: Request) -> Request:
+        """Cold copy of a crashed-away stream (same identity, progress
+        discarded - the KV died).  A hedge registry tracking the old
+        object follows the swap."""
+        c = r.fresh()
+        reg = self._hedges.get(r.rid)
+        if reg is not None:
+            for rec in reg["copies"]:
+                if rec[0] is r:
+                    rec[0] = c
+        elif self.hedge is not None:
+            # not hedged yet, but the pending hedge event still holds
+            # the drained original: register the clone now so the twin
+            # excludes *its* replica (two copies sharing a rid on one
+            # engine would clobber each other in the rid-keyed tables)
+            self._hedges[r.rid] = {"copies": [[c, "live"]], "issued": 0}
+        return c
+
+    def _restart(self, idx: int, t: float) -> None:
+        if not self._crashed.pop(idx, False):
+            return          # the crash was refused or never happened
+        self.retired[idx] = False
+        self._rebuild_live_views()
+        self.telemetry.on_restart(idx, t)
+        h = self.health
+        if h is not None:
+            # forget the pre-crash rate history: judging the cold
+            # rejoiner against a stale baseline would eject it on sight
+            h.forget(idx)
+        bus = self.bus
+        if not bus.live:
+            if not _in_window(self._blackouts.get(idx), t):
+                bus.publish(idx, t)         # honest cold hello
+                if self.obs is not None:
+                    self.obs.on_publish(idx, t, bus.reports[idx])
+            if not self._pub_alive[idx]:
+                self._push(bus.next_publish_ms(t), "publish", idx)
+                self._pub_alive[idx] = True
+
+    def _health_tick(self, idx: int, t: float) -> None:
+        h = self.health
+        bus = self.bus
+        h.observe(idx, bus.reports[idx], t)
+        live = [v.idx for v in self._live_views]
+        ejected, restored = h.evaluate(t, bus.reports, live)
+        if ejected or restored:
+            self._refilter_route_views()
+            self.telemetry.on_eject(len(ejected), len(restored), t)
+            if self.obs is not None:
+                for j in ejected:
+                    self.obs.on_fault(j, t, "eject")
+                for j in restored:
+                    self.obs.on_fault(j, t, "restore")
+
+    def _fire_hedge(self, r: Request, t: float) -> None:
+        """Issue a duplicate copy of a still-unfinished request onto a
+        replica not already holding one; first completion wins."""
+        hedge = self.hedge
+        reg = self._hedges.get(r.rid)
+        issued = reg["issued"] if reg is not None else 0
+        if issued >= hedge.max_hedges:
+            return
+        exclude = set()
+        if reg is not None:
+            for obj, status in reg["copies"]:
+                if status == "live":
+                    exclude.add(obj.replica)
+        else:
+            exclude.add(r.replica)
+        views = [v for v in self._route_views if v.idx not in exclude]
+        if not views:
+            return          # nowhere distinct to hedge to
+        twin = r.fresh()
+        if reg is None:
+            reg = {"copies": [[r, "live"]], "issued": 0}
+            self._hedges[r.rid] = reg
+        reg["copies"].append([twin, "live"])
+        reg["issued"] = issued + 1
+        self._hedges_issued += 1
+        obs = self.obs
+        if obs is not None:
+            obs.on_hedge(twin, t)
+        i = self.router.route(twin, views)
+        twin.replica = i
+        admitted = self.replicas[i].submit(twin)
+        if obs is not None:
+            obs.on_routed(twin, i, admitted, t)
+        self._kick(i, t)
+        if reg["issued"] < hedge.max_hedges:
+            self._push(t + hedge.delay_ms, "hedge", r)
+
+    def _resolve_hedges(self, done: List[Request], t: float) -> None:
+        """First completion wins: cancel every other live copy.  A copy
+        whose completion is already banked stays completed (both twins
+        may finish - the conservation law counts copies, not rids); a
+        copy in KV transit is marked and dropped at its re-arrival."""
+        hedges = self._hedges
+        if not hedges:
+            return
+        obs = self.obs
+        for r in done:
+            reg = hedges.get(r.rid)
+            if reg is None:
+                continue
+            for rec in reg["copies"]:
+                obj, status = rec
+                if obj is r:
+                    rec[1] = "done"
+                elif status == "live":
+                    if obj.done_ms >= 0:
+                        rec[1] = "done"     # banked: both copies count
+                        continue
+                    j = obj.replica
+                    eng = (self.replicas[j]
+                           if 0 <= j < len(self.replicas) else None)
+                    if eng is not None \
+                            and eng.requests.get(obj.rid) is obj:
+                        eng.cancel(obj.rid, t)
+                        rec[1] = "cancelled"
+                        self._cancelled_hedges += 1
+                        if obs is not None:
+                            obs.on_cancel(obj, j, t)
+                        self._kick(j, t)
+                    else:                   # in KV transit somewhere
+                        rec[1] = "cancel_pending"
+
     # -- event loop ----------------------------------------------------------
     def run(self, requests: List[Request], max_ms: float = 120_000.0
             ) -> ClusterResult:
@@ -289,7 +583,8 @@ class Fleet:
         # Clone on entry: engines mutate Request state in place, and one
         # workload list is typically swept across many policy runs.
         self._arrivals = [r.fresh() for r in
-                          sorted(requests, key=lambda r: (r.arrive_ms, r.rid))]
+                          sorted(requests,
+                                 key=attrgetter("arrive_ms", "rid"))]
         self._work = len(self._arrivals)
         obs = self.obs
         if obs is not None:
@@ -300,9 +595,14 @@ class Fleet:
             self.bus.register(eng, 0.0)
             self.telemetry.on_spawn(i, 0.0)
         self._rebuild_live_views()
+        self._pub_alive = [False] * len(self.replicas)
         if not self.bus.live:
             for i in range(len(self.replicas)):
                 self._push(self.bus.next_publish_ms(0.0), "publish", i)
+                self._pub_alive[i] = True
+        if self.faults is not None:
+            for t_f, op, f in self.faults.events():
+                self._push(t_f, "fault", (op, f))
 
         now = 0.0
         injected = 0
@@ -310,7 +610,10 @@ class Fleet:
         # the event loop is the measured substrate's innermost loop: bind
         # the per-event state to locals and inline place/step dispatch
         # (these lists are mutated in place by scaling, never rebound, so
-        # local bindings stay correct)
+        # local bindings stay correct).  The work/migrating counters live
+        # in locals too and sync back to the instance only around the
+        # bookkeeping branches that call out (scaling mutates them via
+        # _push); the local copy is authoritative everywhere else.
         heap = self._heap
         arrivals = self._arrivals
         replicas = self.replicas
@@ -321,8 +624,27 @@ class Fleet:
         bus = self.bus
         pod_arrivals = bus.pod_arrivals
         topo_pods = self.topology.n_pods
+        # seed every pod key up front: the hot loop then pays one dict
+        # store per arrival instead of a get+store pair (consumers read
+        # via .get(p, 0), so a zero-valued key is indistinguishable from
+        # an absent one)
+        for p in range(topo_pods):
+            pod_arrivals.setdefault(p, 0)
         heappush, heappop = heapq.heappush, heapq.heappop
         seq = self._seq
+        work = self._work
+        migrating = self._migrating
+        # fault-plane locals: all None/False on a clean run, so the hot
+        # branches cost one comparison and the trace stays bit-identical
+        hedge_on = self.hedge is not None
+        hedge_delay = self.hedge.delay_ms if hedge_on else 0.0
+        hedges = self._hedges
+        blackouts = self._blackouts or None
+        health = self.health
+        pub_alive = self._pub_alive
+        # obs roll boundary as a plain local float: inf when untraced, so
+        # the per-event check is one comparison, not an attribute read
+        next_roll = obs.next_roll if obs is not None else float("inf")
         ai, n_arr = 0, len(arrivals)
         while True:
             if ai < n_arr:
@@ -339,12 +661,13 @@ class Fleet:
             if t > max_ms:
                 break
             events += 1
-            if obs is not None and t >= obs.next_roll:
+            if t >= next_roll:
                 obs.roll(t)
+                next_roll = obs.next_roll
             # work events advance the measured clock; bookkeeping ticks
             # (publish/scale) must not extend the measured duration
             if kind == "step":
-                self._work -= 1
+                work -= 1
                 now = t
                 i = payload
                 stepping[i] = False
@@ -355,12 +678,19 @@ class Fleet:
                         end_t = t + dt
                         stepping[i] = True
                         step_end[i] = end_t
-                        self._work += 1
+                        work += 1
                         heappush(heap, (end_t, next(seq), "step", i))
-                    if done and obs is not None:
-                        obs.on_completions(done, i)
+                    if done:
+                        if obs is not None:
+                            obs.on_completions(done, i)
+                        if hedge_on:
+                            self._work = work
+                            self._migrating = migrating
+                            self._resolve_hedges(done, t)
+                            work = self._work
+                            migrating = self._migrating
             elif kind == "arrive" or kind == "migrate":
-                self._work -= 1
+                work -= 1
                 now = t
                 if kind == "arrive":
                     injected += 1
@@ -371,13 +701,59 @@ class Fleet:
                     # (it reduces modulo the partition), so out-of-range
                     # request pods never vanish from the rollups
                     p = payload.pod % topo_pods
-                    pod_arrivals[p] = pod_arrivals.get(p, 0) + 1
+                    pod_arrivals[p] += 1
+                    if hedge_on:
+                        heappush(heap, (t + hedge_delay, next(seq),
+                                        "hedge", payload))
+                    views = self._route_views
                 else:
                     p = payload.pod % topo_pods
-                    self._migrating -= 1
+                    migrating -= 1
+                    views = self._route_views
+                    if hedge_on:
+                        reg = hedges.get(payload.rid)
+                        rec = (next((c for c in reg["copies"]
+                                     if c[0] is payload), None)
+                               if reg is not None else None)
+                        if rec is not None:
+                            # a copy cancelled while its KV was in
+                            # transit is dropped here, at the re-arrival
+                            # it was racing toward
+                            if rec[1] == "cancel_pending":
+                                rec[1] = "cancelled"
+                                self._cancelled_hedges += 1
+                                if obs is not None:
+                                    obs.on_cancel(payload, -1, t)
+                                continue
+                            # engines key streams by rid, so two copies
+                            # sharing a rid must never co-reside: steer
+                            # this one away from its resident twin, or
+                            # fold it into the twin when there is
+                            # nowhere collision-free to land
+                            occupied = set()
+                            for c in reg["copies"]:
+                                o = c[0]
+                                if o is payload or c[1] != "live":
+                                    continue
+                                j = o.replica
+                                if 0 <= j < len(replicas) and \
+                                        replicas[j].requests.get(
+                                            payload.rid) is o:
+                                    occupied.add(j)
+                            if occupied:
+                                kept = [v for v in views
+                                        if v.idx not in occupied]
+                                if kept:
+                                    views = kept
+                                else:
+                                    rec[1] = "cancelled"
+                                    self._cancelled_hedges += 1
+                                    if obs is not None:
+                                        obs.on_cancel(payload, -1, t)
+                                    continue
                 if obs is not None:
                     obs.on_inject(payload, kind, t, p)
-                i = route(payload, self._live_views)
+                i = route(payload, views)
                 payload.replica = i
                 eng = replicas[i]
                 admitted = eng.submit(payload)
@@ -389,19 +765,58 @@ class Fleet:
                         end_t = t + dt
                         stepping[i] = True
                         step_end[i] = end_t
-                        self._work += 1
+                        work += 1
                         heappush(heap, (end_t, next(seq), "step", i))
-                    if done and obs is not None:
-                        obs.on_completions(done, i)
+                    if done:
+                        if obs is not None:
+                            obs.on_completions(done, i)
+                        if hedge_on:
+                            self._work = work
+                            self._migrating = migrating
+                            self._resolve_hedges(done, t)
+                            work = self._work
+                            migrating = self._migrating
             elif kind == "publish":
                 i = payload
-                if not self.retired[i]:
-                    self.bus.publish(i, t)
-                    if obs is not None:
-                        obs.on_publish(i, t, bus.reports[i])
-                    if self._work > 0:
-                        self._push(self.bus.next_publish_ms(t), "publish", i)
+                if not retired[i]:
+                    # a blacked-out replica keeps serving and keeps its
+                    # publish chain alive, but the bus never hears from
+                    # it: routers see the pre-blackout report aging
+                    if blackouts is None \
+                            or not _in_window(blackouts.get(i), t):
+                        bus.publish(i, t)
+                        if obs is not None:
+                            obs.on_publish(i, t, bus.reports[i])
+                        if health is not None:
+                            self._health_tick(i, t)
+                    if work > 0:
+                        heappush(heap, (bus.next_publish_ms(t), next(seq),
+                                        "publish", i))
+                    else:
+                        pub_alive[i] = False
+                else:
+                    pub_alive[i] = False
+            elif kind == "fault":
+                op, f = payload
+                self._work = work
+                self._migrating = migrating
+                self._apply_fault(op, f, t)
+                work = self._work
+                migrating = self._migrating
+            elif kind == "hedge":
+                r = payload
+                if r.done_ms < 0:
+                    self._work = work
+                    self._migrating = migrating
+                    self._fire_hedge(r, t)
+                    work = self._work
+                    migrating = self._migrating
             elif kind == "scale":
+                # sync the local counters out: the autoscaler and the
+                # scale paths read/mutate the instance state (_scale_in
+                # pushes migrate events)
+                self._work = work
+                self._migrating = migrating
                 decision = (self.autoscaler(self, t)
                             if self.autoscaler else None)
                 if isinstance(decision, SimServeEngine):
@@ -416,9 +831,14 @@ class Fleet:
                         self._scale_out(decision.add, t, decision.pod)
                     elif decision.remove is not None:
                         self._scale_in(decision.remove, t)
+                work = self._work
+                migrating = self._migrating
                 # keep ticking while any work remains on the heap
-                if self._work > 0:
-                    self._push(t + self.autoscale_every_ms, "scale", None)
+                if work > 0:
+                    heappush(heap, (t + self.autoscale_every_ms, next(seq),
+                                    "scale", None))
+        self._work = work
+        self._migrating = migrating
         # offered = requests that actually arrived before the max_ms cutoff,
         # so completed + live + migrating == offered for any (workload,
         # max_ms).  Step effects are banked at step start, so a truncated
@@ -437,7 +857,10 @@ class Fleet:
                                        events=events,
                                        topology=self.topology,
                                        pod_arrivals=dict(pod_arrivals),
-                                       windows=windows)
+                                       windows=windows,
+                                       hedges_issued=self._hedges_issued,
+                                       cancelled_hedges=(
+                                           self._cancelled_hedges))
 
 
 def run_fleet(requests: List[Request], router: Union[Router, str],
@@ -454,7 +877,10 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
               victim: str = "least_outstanding",
               pod_scoped: bool = False,
               season_period_ms: Optional[float] = None,
-              obs=None) -> ClusterResult:
+              obs=None,
+              faults: Optional[FaultSchedule] = None,
+              health: Optional[HealthPolicy] = None,
+              hedge: Optional[HedgePolicy] = None) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
     ``router`` is a built ``Router`` or a policy name; a name is resolved
@@ -475,10 +901,17 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
     controller, so pod-scoped decisions and pod-affine routing read the
     same replica<->pod partition.  ``obs`` threads an
     ``obs.Observability`` bundle through the run (None = untraced,
-    zero-overhead).
+    zero-overhead).  ``faults``/``health``/``hedge`` arm the fault
+    plane (see ``cluster.faults``): all three default off and, like
+    ``obs``, leaving them off is bit-identical to a build without them.
+    ``health`` requires ``staleness_ms`` > 0 - ejection judges the
+    published gauges, so it needs a periodic bus to read.
     """
     cfg = cfg or FleetConfig()
     slo = slo or SLO()
+    if health is not None and staleness_ms <= 0.0:
+        raise ValueError("health ejection reads the periodic published "
+                         "gauges; pass staleness_ms > 0")
     if isinstance(router, str):
         topo = FleetTopology(cfg.n_pods)
         router = make_router(
@@ -495,5 +928,6 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
                              pod_scoped=pod_scoped,
                              season_period_ms=season_period_ms)
     fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
-                  bus=bus, topology=topo, obs=obs)
+                  bus=bus, topology=topo, obs=obs, faults=faults,
+                  health=health, hedge=hedge)
     return fleet.run(requests, max_ms=max_ms)

@@ -29,9 +29,20 @@ __all__ = ["conserved_count", "assert_conserved", "assert_percentiles",
 
 
 def conserved_count(res: ClusterResult) -> int:
-    """completed + live + in-migration; must equal ``res.offered``."""
+    """Copy-space conservation: every *copy* of a stream is accounted.
+
+    ``completed + live + in-migration + lost + cancelled_hedges
+    - hedges_issued == offered``.  A crash with ``policy="lose"`` moves
+    copies to ``lost``; each hedge mints one extra copy
+    (``hedges_issued``) which must end up completed, live, migrating,
+    lost, or ``cancelled``.  On a fault-free run every fault-plane term
+    is absent from ``stats`` and the law reduces to the legacy
+    ``completed + live + migrating == offered``."""
     live = sum(r["active_end"] + r["parked_end"] for r in res.per_replica)
-    return res.completed + live + int(res.stats.get("migrating_end", 0))
+    s = res.stats
+    return (res.completed + live + int(s.get("migrating_end", 0))
+            + int(s.get("lost", 0)) + int(s.get("cancelled_hedges", 0))
+            - int(s.get("hedges_issued", 0)))
 
 
 def assert_conserved(res: ClusterResult, tag: str = "") -> None:
@@ -88,7 +99,8 @@ def guarded_case(seed: int, kind: str, router_name: str,
                  max_ms: float = 60_000.0, rps_mult: float = 2.0,
                  duration_ms: float = 900.0, staleness_ms: float = 0.0,
                  n_replicas: int = 3,
-                 prefix_cache_tokens: int = 50_000) -> ClusterResult:
+                 prefix_cache_tokens: int = 50_000,
+                 faults=None, health=None, hedge=None) -> ClusterResult:
     """Run one seeded fleet scenario under ``PlacementGuard`` and assert
     every L2 invariant on the result.
 
@@ -105,6 +117,12 @@ def guarded_case(seed: int, kind: str, router_name: str,
     ``("in_pod", p)`` retires the first live replica the shared topology
     files under pod ``p % n_pods`` (falling back to any live replica if
     the pod is empty), anything else is a no-op tick.
+
+    ``faults``/``health``/``hedge`` thread a ``cluster.faults`` fault
+    schedule, ejection policy, and hedging policy through the run, so
+    both suites can assert copy-space conservation under limplock,
+    crash/restart, blackout, and mid-migration-crash interleavings
+    (``health`` needs ``staleness_ms`` > 0).
     """
     # local imports: this module is imported by router/telemetry consumers
     # that must not pay for (or cycle into) the fleet machinery
@@ -163,7 +181,8 @@ def guarded_case(seed: int, kind: str, router_name: str,
                   bus=SignalBus(slo=SLO(), period_ms=staleness_ms,
                                 jitter_ms=(10.0 if staleness_ms else 0.0),
                                 seed=seed),
-                  topology=topo)
+                  topology=topo, faults=faults, health=health,
+                  hedge=hedge)
     res = fleet.run(reqs, max_ms=max_ms)
     tag = f"{kind}/{router_name}/seed={seed}/sched={steps}/max={max_ms}"
     assert_conserved(res, tag)

@@ -64,8 +64,9 @@ FLIGHT_SCHEMA = "repro.obs.flight.v1"
 WINDOW_SCHEMA = "repro.obs.window.v1"
 
 SPAN_EVENTS = ("arrive", "migrate_in", "route", "admit", "park", "unpark",
-               "demote", "first_token", "complete", "migrate_out")
-FLIGHT_KINDS = ("publish", "scale_tick", "spawn", "retire")
+               "demote", "first_token", "complete", "migrate_out",
+               "hedge", "cancel")
+FLIGHT_KINDS = ("publish", "scale_tick", "spawn", "retire", "fault")
 
 SCALE_ACTIONS = ("none", "add", "remove")
 
@@ -208,6 +209,15 @@ class FlightRecorder:
                              "replica": idx, "migrated": migrated,
                              "drain_end_ms": drain_end_ms})
 
+    def on_fault(self, t_ms: float, idx: int, op: str,
+                 **detail) -> None:
+        """A fault-plane edge (limp/blackout/crash/restart/eject/
+        restore) was applied to replica ``idx``."""
+        rec: Dict[str, Any] = {"kind": "fault", "t_ms": t_ms,
+                               "replica": idx, "op": op}
+        rec.update(detail)
+        self.entries.append(rec)
+
     def decisions(self) -> List[Dict[str, Any]]:
         """The non-no-op scale decisions, in tick order."""
         return [r for r in self.entries
@@ -269,6 +279,11 @@ class WindowedMetrics:
     def on_migrate(self, t_ms: float) -> None:
         _bump(self._fleet.setdefault(self._win(t_ms), {}), "migrated")
         self.totals["migrated"] += 1
+
+    def on_fault(self, t_ms: float, replica: int) -> None:
+        k = self._win(t_ms)
+        _bump(self._rep.setdefault(k, {}).setdefault(replica, {}),
+              "faults")
 
     def on_completion(self, r, replica: int, pod: int) -> None:
         k = self._win(r.done_ms)
@@ -337,6 +352,7 @@ class WindowedMetrics:
                     "routed": c.get("routed", 0),
                     "completed": c.get("completed", 0),
                     "tokens": c.get("tokens", 0),
+                    "faults": c.get("faults", 0),
                     "active": g["active"], "parked": g["parked"],
                     "active_limit": g["active_limit"],
                     "cache_tokens": g["cache_tokens"],
@@ -500,6 +516,12 @@ class Observability:
                 tr.emit("arrive", t_ms, req.rid, pod=req.pod,
                         prompt_len=req.prompt_len, gen_len=req.gen_len,
                         session_id=req.session_id)
+            elif req.first_token_ms < 0.0:
+                # not yet streaming: a crash-requeued clone (restarts
+                # from scratch, may re-emit first_token) or a pre-token
+                # migrant - either way the stream is cold on arrival
+                tr.emit("migrate_in", t_ms, req.rid, pod=req.pod,
+                        cold=True)
             else:
                 tr.emit("migrate_in", t_ms, req.rid, pod=req.pod)
             self._cands = self._candidates(t_ms)
@@ -578,7 +600,8 @@ class Observability:
                 cands = [i for i in live if pod_of(i) == decision.pod]
             try:
                 keys = victim_scores(decision.victim,
-                                     [bus.reports[i] for i in cands], cands)
+                                     [bus.reports[i] for i in cands], cands,
+                                     getattr(fleet, "ejected", ()))
                 rationale = [{"replica": cands[j], "key": list(keys[j])}
                              for j in range(len(cands))]
             except ValueError:
@@ -606,6 +629,40 @@ class Observability:
             for r in parked_moved:
                 tr.emit("migrate_out", t_ms, r.rid, replica=idx,
                         resident=False)
+
+    # -- fault-plane hooks ---------------------------------------------------
+    def on_fault(self, idx: int, t_ms: float, op: str, requeued: int = 0,
+                 lost: int = 0, moved=()) -> None:
+        """A fault edge (or health eject/restore) hit replica ``idx``;
+        ``moved`` carries the crash-requeued streams as ``(req, t_out)``
+        so their migrate_out spans keep the lifecycle conserved."""
+        if self.recorder is not None:
+            if op == "crash":
+                self.recorder.on_fault(t_ms, idx, op, requeued=requeued,
+                                       lost=lost)
+            else:
+                self.recorder.on_fault(t_ms, idx, op)
+        if self.metrics is not None:
+            self.metrics.on_fault(t_ms, idx)
+        tr = self.tracer
+        if tr is not None:
+            for r, t_out in moved:
+                tr.emit("migrate_out", t_out, r.rid, replica=idx,
+                        resident=False)
+
+    def on_hedge(self, twin, t_ms: float) -> None:
+        """A hedge duplicate was issued; captured *before* the route
+        call, same contract as ``on_inject``."""
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("hedge", t_ms, twin.rid)
+            self._cands = self._candidates(t_ms)
+
+    def on_cancel(self, req, idx: int, t_ms: float) -> None:
+        """A hedge copy was cancelled (``idx`` = -1: cancelled while its
+        KV was in transit, i.e. off any replica)."""
+        if self.tracer is not None:
+            self.tracer.emit("cancel", t_ms, req.rid, replica=idx)
 
     # -- results -------------------------------------------------------------
     @property
@@ -743,10 +800,13 @@ def span_conservation(records: Sequence[Dict[str, Any]]
     unpark as often as it was parked or demoted.
     """
     per: Dict[int, Dict[str, int]] = {}
+    cold_in: Dict[int, int] = {}
     for r in records:
         if r.get("kind") != "span":
             continue
         _bump(per.setdefault(r["rid"], {}), r["event"])
+        if r["event"] == "migrate_in" and r.get("cold"):
+            cold_in[r["rid"]] = cold_in.get(r["rid"], 0) + 1
     agg: Dict[str, Any] = {ev + "s": 0 for ev in SPAN_EVENTS}
     violations: List[str] = []
     for rid in sorted(per):
@@ -756,7 +816,11 @@ def span_conservation(records: Sequence[Dict[str, Any]]
             agg[ev + "s"] = agg.get(ev + "s", 0) + n
         if c.get("arrive", 0) != 1:
             violations.append(f"rid {rid}: {c.get('arrive', 0)} arrivals")
-        injected = c.get("arrive", 0) + c.get("migrate_in", 0)
+        # a hedge is an injection of a duplicate copy sharing the rid:
+        # it routes and places like any arrival, and lets the stream
+        # legitimately complete (or first-token) once per extra copy
+        hedges = c.get("hedge", 0)
+        injected = c.get("arrive", 0) + c.get("migrate_in", 0) + hedges
         routes = c.get("route", 0)
         placed = c.get("admit", 0) + c.get("park", 0)
         if routes != injected:
@@ -765,10 +829,16 @@ def span_conservation(records: Sequence[Dict[str, Any]]
         if placed != routes:
             violations.append(f"rid {rid}: {placed} admit/park for "
                               f"{routes} routes")
-        if c.get("complete", 0) > 1:
+        if c.get("complete", 0) > 1 + hedges:
             violations.append(f"rid {rid}: completed twice")
-        if c.get("first_token", 0) > 1:
+        # a COLD re-injection (a crash-requeued clone, ``cold`` flag on
+        # its migrate_in span) restarts the stream from scratch, so it
+        # may re-emit first_token; a warm migrant carries its progress
+        # and must not
+        if c.get("first_token", 0) > 1 + hedges + cold_in.get(rid, 0):
             violations.append(f"rid {rid}: two first tokens")
+        if c.get("cancel", 0) > hedges:
+            violations.append(f"rid {rid}: more cancels than hedges")
         if c.get("unpark", 0) > c.get("park", 0) + c.get("demote", 0):
             violations.append(f"rid {rid}: more unparks than park+demote")
     agg["requests"] = len(per)
@@ -780,7 +850,7 @@ _SPAN_FIELDS = {"route": ("replica", "candidates"),
                 "admit": ("replica",), "park": ("replica",),
                 "unpark": ("replica",), "demote": ("replica",),
                 "first_token": ("replica",), "complete": ("replica",),
-                "migrate_out": ("replica",)}
+                "migrate_out": ("replica",), "cancel": ("replica",)}
 
 
 def validate_spans(records: Sequence[Dict[str, Any]]) -> List[str]:

@@ -207,7 +207,21 @@ class GCRAwareRouter(Router):
         return group
 
     def route(self, req, views: Sequence[ReplicaView]) -> int:
-        group = self._partition(req.pod, views)
+        # _partition's cache-hit path, inlined: the view list's identity
+        # only changes on scaling events, so per arrival this is one
+        # identity test and one dict probe
+        if views is not self._cached_views:
+            self._cached_views = views
+            self._groups = {}
+            self._by_idx = {v.idx: v for v in views}
+        pod = req.pod % self.n_pods
+        group = self._groups.get(pod)
+        if group is None:
+            pod_of = self.topology.pod_of
+            group = [v for v in views if pod_of(v.idx) == pod]
+            if not group:
+                group = list(views)
+            self._groups[pod] = group
         tracer = self.tracer
         scores = [] if tracer is not None else None
         # single pass in ascending idx order; strict < keeps the first

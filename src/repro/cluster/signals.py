@@ -187,6 +187,48 @@ class ReplicaView:
         return hits / asks if asks else 0.0
 
 
+class _LiveReplicaView(ReplicaView):
+    """``ReplicaView`` specialized for the omniscient bus.
+
+    ``SignalBus.live`` is fixed at construction (``period_ms`` never
+    changes), so the per-read ``self._bus.live`` branch in every accessor
+    is a constant the bus already knows at ``register`` time.  This
+    subclass bakes the live side of each branch in; behavior is
+    bit-identical, the router's placement scan just stops re-testing a
+    constant on every candidate gauge read.
+    """
+
+    __slots__ = ()
+
+    @property
+    def num_active(self) -> int:
+        return len(self._eng.active)
+
+    @property
+    def num_parked(self) -> int:
+        return self._eng.admission.num_parked
+
+    @property
+    def outstanding(self) -> int:
+        e = self._eng
+        return len(e.active) + e.admission.num_parked
+
+    @property
+    def cache_tokens(self) -> int:
+        pc = self._eng.prefix_cache
+        return pc.tokens if pc else 0
+
+    def age_ms(self, now_ms: float) -> float:
+        return 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        pc = self._eng.prefix_cache
+        if pc is None or not pc.query_tokens:
+            return 0.0
+        return pc.hit_tokens / pc.query_tokens
+
+
 class SignalBus:
     """Last-published-report store + publish scheduling policy.
 
@@ -229,7 +271,8 @@ class SignalBus:
         self.engines.append(engine)
         self._scan_n.append(0)
         self._slo_met.append(0)
-        self.views.append(ReplicaView(idx, self))
+        cls = _LiveReplicaView if self.live else ReplicaView
+        self.views.append(cls(idx, self))
         self.reports.append(self._capture(idx, now_ms))
         return idx
 

@@ -107,9 +107,48 @@ class ClusterTelemetry:
         self.retire_ms: Dict[int, float] = {}
         self.migrated = 0
         self.prefix_tokens_lost = 0
+        # fault plane (DESIGN.md 11); all zero on a clean run, and the
+        # fault stats/rows only render when something here moved, so a
+        # run without a schedule emits byte-identical results
+        self.fault_events = 0
+        self.crashes = 0
+        self.restarts = 0
+        self.requeued = 0
+        self.lost = 0
+        self.ejections = 0
+        self.restorations = 0
+        self.crash_count: Dict[int, int] = {}
+        self.downtime_ms: Dict[int, float] = {}
+        self._down_since: Dict[int, float] = {}
 
     def on_scale(self, now_ms: float) -> None:
         self.scale_events.append(now_ms)
+
+    def on_fault(self, op: str, idx: int, now_ms: float) -> None:
+        """A non-crash fault edge was applied (limp/blackout/restart)."""
+        self.fault_events += 1
+
+    def on_crash(self, idx: int, now_ms: float, requeued: int = 0,
+                 lost: int = 0, prefix_tokens_lost: int = 0) -> None:
+        self.fault_events += 1
+        self.crashes += 1
+        self.crash_count[idx] = self.crash_count.get(idx, 0) + 1
+        self.requeued += requeued
+        self.lost += lost
+        self.prefix_tokens_lost += prefix_tokens_lost
+        self._down_since[idx] = now_ms
+
+    def on_restart(self, idx: int, now_ms: float) -> None:
+        self.restarts += 1
+        since = self._down_since.pop(idx, None)
+        if since is not None:
+            self.downtime_ms[idx] = (self.downtime_ms.get(idx, 0.0)
+                                     + max(0.0, now_ms - since))
+
+    def on_eject(self, n_ejected: int, n_restored: int,
+                 now_ms: float) -> None:
+        self.ejections += n_ejected
+        self.restorations += n_restored
 
     def on_spawn(self, idx: int, now_ms: float) -> None:
         self.spawn_ms[idx] = now_ms
@@ -125,8 +164,9 @@ class ClusterTelemetry:
                  offered: int, migrating: int = 0,
                  events: int = 0, topology=None,
                  pod_arrivals: Optional[Dict[int, int]] = None,
-                 windows: Optional[List[Dict[str, float]]] = None
-                 ) -> ClusterResult:
+                 windows: Optional[List[Dict[str, float]]] = None,
+                 hedges_issued: int = 0,
+                 cancelled_hedges: int = 0) -> ClusterResult:
         completed: List[Request] = []
         for eng in replicas:
             completed.extend(eng.completed)
@@ -208,6 +248,17 @@ class ClusterTelemetry:
                     "goodput_tok_s": met_gen_p / dur_s,
                 })
 
+        # fault plane: close out downtime for replicas still dead at the
+        # end, and decide once whether this run exercised faults at all
+        # (clean runs must render byte-identical rows and stats)
+        for i, since in self._down_since.items():
+            self.downtime_ms[i] = (self.downtime_ms.get(i, 0.0)
+                                   + max(0.0, now_ms - since))
+        self._down_since.clear()
+        faulted = bool(self.fault_events or self.ejections
+                       or self.restorations or hedges_issued
+                       or cancelled_hedges)
+
         per_replica = []
         replica_ms = 0.0
         for i, eng in enumerate(replicas):
@@ -216,6 +267,8 @@ class ClusterTelemetry:
             # spawn/retire land on bookkeeping ticks that may sit past the
             # last measured event, so clamp each lifetime term at >= 0
             life = max(0.0, (retire if retire >= 0.0 else now_ms) - spawn)
+            # a crashed span bills no replica-ms: the process is gone
+            life = max(0.0, life - self.downtime_ms.get(i, 0.0))
             replica_ms += life
             pc = eng.prefix_cache
             per_replica.append({
@@ -235,8 +288,12 @@ class ClusterTelemetry:
                 "cache_hit_rate": (pc.hit_tokens / pc.query_tokens
                                    if pc and pc.query_tokens else 0.0),
             })
+            if faulted:
+                per_replica[-1]["crashes"] = self.crash_count.get(i, 0)
+                per_replica[-1]["downtime_ms"] = \
+                    self.downtime_ms.get(i, 0.0)
 
-        return ClusterResult(
+        res = ClusterResult(
             offered=offered,
             completed=len(completed),
             sim_ms=now_ms,
@@ -269,3 +326,17 @@ class ClusterTelemetry:
                    "ttft_cold_p50_ms": percentile(cold, 0.50),
                    "ttft_cold_p99_ms": percentile(cold, 0.99)},
         )
+        if faulted:
+            res.stats.update({
+                "fault_events": float(self.fault_events),
+                "crashes": float(self.crashes),
+                "restarts": float(self.restarts),
+                "requeued": float(self.requeued),
+                "lost": float(self.lost),
+                "ejections": float(self.ejections),
+                "restorations": float(self.restorations),
+                "hedges_issued": float(hedges_issued),
+                "cancelled_hedges": float(cancelled_hedges),
+                "downtime_ms": float(sum(self.downtime_ms.values())),
+            })
+        return res

@@ -95,6 +95,9 @@ CONTRACT: Contract = {
                 "pod_scoped": "False",
                 "season_period_ms": "None",
                 "obs": "None",
+                "faults": "None",
+                "health": "None",
+                "hedge": "None",
             },
         },
         "knee_cost": {
@@ -255,6 +258,59 @@ CONTRACT: Contract = {
                 "seed": "0",
                 "n_pods": "2",
                 "topology": "None",
+            },
+        },
+    },
+    "src/repro/cluster/faults.py": {
+        "Limplock": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "replica": REQUIRED,
+                "start_ms": REQUIRED,
+                "end_ms": REQUIRED,
+                "factor": "8.0",
+            },
+        },
+        "Crash": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "replica": REQUIRED,
+                "at_ms": REQUIRED,
+                "restart_ms": "None",
+                "policy": "'requeue'",
+            },
+        },
+        "Blackout": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "replica": REQUIRED,
+                "start_ms": REQUIRED,
+                "end_ms": REQUIRED,
+            },
+        },
+        "FaultSchedule": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "limplocks": "()",
+                "crashes": "()",
+                "blackouts": "()",
+            },
+        },
+        "HedgePolicy": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "delay_ms": "400.0",
+                "max_hedges": "1",
+            },
+        },
+        "HealthPolicy": {
+            "pinned_by": "tests/test_faults.py",
+            "params": {
+                "ewma_alpha": "0.3",
+                "rate_frac": "0.5",
+                "min_reports": "3",
+                "stale_ms": "0.0",
+                "max_eject_frac": "0.5",
             },
         },
     },

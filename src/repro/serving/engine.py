@@ -24,6 +24,7 @@ Step-cost model (per decode step over the active batch):
 from __future__ import annotations
 
 import heapq
+from heapq import heappop as _heappop, heappush as _heappush
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -175,6 +176,15 @@ class PrefixCache:
         self._entries[prefix_id] = keep
         self.tokens += keep
 
+    def clear(self) -> None:
+        """Drop every entry (a crash takes the replica's warm KV with
+        it).  Cumulative hit/query counters survive - they describe
+        served history, not contents - and the dropped tokens count as
+        evicted, so fleet-wide churn telemetry sees the loss."""
+        self.evicted_tokens += self.tokens
+        self._entries.clear()
+        self.tokens = 0
+
 
 @dataclass
 class ServeResult:
@@ -283,8 +293,8 @@ class SimServeEngine:
         pod = r.pod
         pods = self._pod_count
         pods[pod] = pods.get(pod, 0) + 1
-        heapq.heappush(self._finish_heap,
-                       (nsteps + r.gen_len - gen, seq, rid))
+        _heappush(self._finish_heap,
+                  (nsteps + r.gen_len - gen, seq, rid))
         if r.first_token_ms < 0:
             # insertion position must track the active dict's (a demoted
             # stream re-joins at the end, so pop before re-inserting)
@@ -401,6 +411,53 @@ class SimServeEngine:
         self.admission.drain()
         return active_moved, parked_moved
 
+    def cancel(self, rid: int, now: float = 0.0) -> bool:
+        """Withdraw an unfinished stream (fleet hedging: the twin that
+        lost the race).  Returns False if the stream is unknown here or
+        its completion is already banked - a banked effect is committed
+        and cancellation never rolls it back.  An active stream's slot
+        is released through the admission exactly like a completion
+        (promotions and demotions included), so occupancy accounting
+        cannot drift; a parked stream is withdrawn from the passive
+        queue.  Tokens decoded so far stay billed - the work happened.
+        """
+        r = self.requests.get(rid)
+        if r is None or r.done_ms >= 0:
+            return False
+        adm = self.admission
+        obs = self.obs
+        if rid in self.active:
+            self._deactivate(rid)
+            del self.requests[rid]
+            for new_rid in adm.release(rid):
+                if new_rid in self.requests and new_rid not in self.active \
+                        and self.requests[new_rid].done_ms < 0:
+                    self._activate(self.requests[new_rid])
+                    if obs is not None:
+                        obs.on_unpark(new_rid, now)
+            if self._reports_demoted:
+                for rid2 in adm.last_demoted:
+                    if rid2 in self.active:
+                        self._deactivate(rid2)
+                        if obs is not None:
+                            obs.on_demote(rid2, now)
+            else:
+                for rid2 in list(self.active.keys()):
+                    if rid2 not in getattr(adm, "active", {rid2: None}):
+                        self._deactivate(rid2)
+                        if obs is not None:
+                            obs.on_demote(rid2, now)
+        else:
+            del self.requests[rid]
+            if self._has_cancel:
+                adm.cancel(rid)
+        if r.first_token_ms < 0 and self.prefix_cache is not None \
+                and r.prefix_id >= 0 and r.prefix_len > 0:
+            # never prefilled here: refund the probe, as drain() does
+            self.prefix_cache.query_tokens -= r.prefix_len
+            self.prefix_cache.hit_tokens -= r.prefix_hit_tokens
+        return True
+
     def step(self, now: float) -> tuple:
         """One decode step over the active batch, starting at virtual time
         ``now``.  Returns ``(dt_ms, finished_requests)``; finished requests
@@ -410,6 +467,7 @@ class SimServeEngine:
         ``self.active`` immediately but only decode from the next step."""
         adm = self.admission
         active = self.active
+        obs = self.obs
         if not active:
             return 0.0, []
         n_entry = len(active)
@@ -459,8 +517,8 @@ class SimServeEngine:
         if pending:
             for r in pending.values():
                 r.first_token_ms = end
-            if self.obs is not None:
-                self.obs.on_first_tokens(pending, end)
+            if obs is not None:
+                obs.on_first_tokens(pending, end)
             pending.clear()
 
         # completions: drain the finish calendar up to this step, drop
@@ -470,8 +528,12 @@ class SimServeEngine:
         requests = self.requests
         finished: List[tuple] = []
         while finish_heap and finish_heap[0][0] <= cur:
-            _fs, seq, rid = heapq.heappop(finish_heap)
-            if requests[rid]._join_seq == seq:
+            _fs, seq, rid = _heappop(finish_heap)
+            # .get: a cancelled stream (fleet hedging) leaves its
+            # calendar entry behind; a live entry still validates by
+            # join sequence exactly as before
+            r = requests.get(rid)
+            if r is not None and r._join_seq == seq:
                 finished.append((seq, rid))
         if not finished:
             return dt, []
@@ -495,8 +557,8 @@ class SimServeEngine:
                 if new_rid in requests and new_rid not in active and \
                         requests[new_rid].done_ms < 0:
                     self._activate(requests[new_rid])
-                    if self.obs is not None:
-                        self.obs.on_unpark(new_rid, end)
+                    if obs is not None:
+                        obs.on_unpark(new_rid, end)
             # demotions: active streams the admission evicted during this
             # release (reported O(1); generic admissions fall back to the
             # legacy scan)
@@ -504,14 +566,14 @@ class SimServeEngine:
                 for rid2 in adm.last_demoted:
                     if rid2 in active:
                         self._deactivate(rid2)
-                        if self.obs is not None:
-                            self.obs.on_demote(rid2, end)
+                        if obs is not None:
+                            obs.on_demote(rid2, end)
             else:
                 for rid2 in list(active.keys()):
                     if rid2 not in getattr(adm, "active", {rid2: None}):
                         self._deactivate(rid2)
-                        if self.obs is not None:
-                            self.obs.on_demote(rid2, end)
+                        if obs is not None:
+                            obs.on_demote(rid2, end)
         if pc is not None:
             for r in done:
                 if r.prefix_id >= 0:

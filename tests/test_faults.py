@@ -1,0 +1,378 @@
+"""Fault-injection plane tests (DESIGN.md 11).
+
+Pins the three contracts the fault plane makes:
+
+* **zero perturbation** - an armed-but-empty ``FaultSchedule`` (and
+  disabled health/hedge knobs) is bit-identical to a build without the
+  fault plane, per router policy, against the committed goldens;
+* **fault semantics** - limplock inflates *measured* step cost while the
+  published gauges keep their healthy meaning; a blackout freezes the
+  published report (routers watch ``age_ms`` grow) while the replica
+  keeps serving; a crash requeues or loses in-flight copies and a
+  restart rejoins cold;
+* **copy-space conservation** - ``completed + live + migrating + lost +
+  cancelled_hedges - hedges_issued == offered`` across crash/restart,
+  both crash policies, hedging, and mid-migration crashes, for every
+  router policy (the matrix behind ``tests/test_properties.py``'s
+  fuzz).
+
+This file is also the ``pinned_by`` anchor for every knob the R3
+contract table registers from ``repro.cluster.faults``.
+"""
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import pickle
+
+import pytest
+
+from repro.cluster import (SLO, Blackout, ClusterTelemetry, Crash, Fleet,
+                           FleetConfig, FaultSchedule, HealthEstimator,
+                           HealthPolicy, HedgePolicy, Limplock,
+                           Observability, WorkloadSpec, conserved_count,
+                           est_capacity_rps, guarded_case, knee_cost,
+                           make_router, run_fleet, sessions)
+from repro.cluster.router import ROUTERS
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "cluster_traces.json"
+
+SEED = 7
+SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
+LIMIT = 32
+N_REPLICAS = 4
+
+
+def _cfg() -> FleetConfig:
+    cost = dataclasses.replace(knee_cost(SPEC, LIMIT, oversub=2.0),
+                               t_prefill_ms_per_tok=0.05)
+    return FleetConfig(n_replicas=N_REPLICAS, admission="gcr",
+                       active_limit=LIMIT, n_pods=2, cost=cost,
+                       prefix_cache_tokens=60_000)
+
+
+def _workload():
+    cap = est_capacity_rps(SPEC, LIMIT, N_REPLICAS, _cfg().cost)
+    return sessions(2.0 * cap, 1_500.0, SPEC, seed=SEED, think_ms=800.0)
+
+
+def _digest(fleet_replicas) -> str:
+    rows = []
+    completed = sorted((r for eng in fleet_replicas for r in eng.completed),
+                       key=lambda r: r.rid)
+    for r in completed:
+        rows.append(f"{r.rid}:{r.replica}:{r.first_token_ms.hex()}:"
+                    f"{r.done_ms.hex()}:{r.prefix_hit_tokens}")
+    return hashlib.sha256("\n".join(rows).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# schedule construction + validation (pins the R3 contract defaults)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_defaults_and_validation():
+    assert Limplock(0, 10.0, 20.0).factor == 8.0
+    assert Crash(0, 10.0).restart_ms is None
+    assert Crash(0, 10.0).policy == "requeue"
+    hp = HedgePolicy()
+    assert (hp.delay_ms, hp.max_hedges) == (400.0, 1)
+    h = HealthPolicy()
+    assert (h.ewma_alpha, h.rate_frac, h.min_reports, h.stale_ms,
+            h.max_eject_frac) == (0.3, 0.5, 3, 0.0, 0.5)
+    with pytest.raises(ValueError):
+        Limplock(0, 20.0, 10.0)            # window reversed
+    with pytest.raises(ValueError):
+        Limplock(0, 10.0, 20.0, factor=1.0)  # no inflation
+    with pytest.raises(ValueError):
+        Crash(0, 10.0, restart_ms=5.0)     # restart before crash
+    with pytest.raises(ValueError):
+        Crash(0, 10.0, policy="retry")     # unknown policy
+    with pytest.raises(ValueError):
+        Blackout(0, 20.0, 10.0)
+
+
+def test_schedule_events_ordered_and_picklable():
+    f = FaultSchedule(
+        limplocks=[Limplock(0, 100.0, 500.0), Limplock(1, 50.0, 500.0)],
+        crashes=[Crash(2, 500.0, restart_ms=900.0)],
+        blackouts=[Blackout(0, 100.0, 500.0)])
+    assert bool(f) and not bool(FaultSchedule())
+    evs = f.events()
+    assert [t for t, _, _ in evs] == sorted(t for t, _, _ in evs)
+    # at one instant, "off"/restart edges order before "on"/crash edges
+    at_500 = [op for t, op, _ in evs if t == 500.0]
+    assert at_500.index("limp_off") < at_500.index("crash")
+    assert f.blackout_windows() == {0: ((100.0, 500.0),)}
+    # GridPoint ships schedules to pool workers: they must pickle
+    assert pickle.loads(pickle.dumps(f)) == f
+
+
+# ---------------------------------------------------------------------------
+# zero-perturbation: empty schedule is bit-identical to the goldens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ROUTERS)
+def test_empty_schedule_bit_identical_to_golden(policy):
+    golden = json.loads(GOLDEN_PATH.read_text())[policy]
+    fleet = Fleet(_cfg().make_engines(),
+                  make_router(policy, seed=1, n_pods=2),
+                  ClusterTelemetry(SLO()), faults=FaultSchedule(),
+                  health=None, hedge=None)
+    res = fleet.run(_workload(), max_ms=60_000.0)
+    assert _digest(fleet.replicas) == golden["digest"]
+    assert res.completed == golden["completed"]
+    # no fault-plane keys leak into a clean run's stats
+    assert "fault_events" not in res.stats
+    assert not any("crashes" in row for row in res.per_replica)
+
+
+def test_out_of_pool_fault_is_inert():
+    """A schedule naming a replica the run never builds applies nothing:
+    identical traces and stats, except ``sim_events`` honestly counts the
+    ghost calendar slots the armed schedule consumed."""
+    ghost = FaultSchedule(limplocks=[Limplock(99, 100.0, 400.0)],
+                          crashes=[Crash(50, 200.0)])
+    a = run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                  _cfg(), max_ms=60_000.0)
+    b = run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                  _cfg(), max_ms=60_000.0, faults=ghost)
+    ja, jb = json.loads(a.to_json()), json.loads(b.to_json())
+    assert jb["stats"].pop("sim_events") == \
+        ja["stats"].pop("sim_events") + 3.0
+    assert ja == jb
+    assert "fault_events" not in b.stats     # nothing actually applied
+
+
+def test_health_requires_periodic_bus():
+    with pytest.raises(ValueError):
+        run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                  _cfg(), health=HealthPolicy(), staleness_ms=0.0)
+
+
+# ---------------------------------------------------------------------------
+# limplock: measured cost inflates, published gauges stay rosy
+# ---------------------------------------------------------------------------
+
+
+def test_limplock_inflates_measured_cost_not_gauges():
+    reqs = _workload()
+    clean = run_fleet(reqs, make_router("gcr_aware", seed=1, n_pods=2),
+                      _cfg(), max_ms=2_500.0, staleness_ms=60.0)
+    obs = Observability(spans=False)
+    limp = FaultSchedule(limplocks=[Limplock(0, 0.0, 60_000.0,
+                                             factor=8.0)])
+    res = run_fleet(reqs, make_router("gcr_aware", seed=1, n_pods=2),
+                    _cfg(), max_ms=2_500.0, staleness_ms=60.0,
+                    faults=limp, obs=obs)
+    # measured: at the truncation point the limping replica has
+    # delivered far less work than its clean-run self
+    assert res.per_replica[0]["completed"] < \
+        0.5 * clean.per_replica[0]["completed"]
+    # published: its reports keep flowing and keep the healthy schema -
+    # occupancy gauges, no sickness bit anywhere (the blind router can
+    # only infer trouble from what these numbers *do over time*)
+    pubs = [e for e in obs.recorder.entries
+            if e["kind"] == "publish" and e["replica"] == 0]
+    assert len(pubs) > 10
+    assert all(0 <= e["report"]["num_active"] <= LIMIT for e in pubs)
+
+
+def test_limplock_restores_cost_model_after_window():
+    f = FaultSchedule(limplocks=[Limplock(0, 100.0, 400.0, factor=8.0)])
+    reqs = _workload()
+    telem = ClusterTelemetry(SLO())
+    fleet = Fleet(_cfg().make_engines(),
+                  make_router("gcr_aware", seed=1, n_pods=2), telem,
+                  faults=f)
+    fleet.run(reqs, max_ms=60_000.0)
+    assert fleet.replicas[0].cost == _cfg().cost   # saved model restored
+    assert telem.fault_events == 2                 # limp_on + limp_off
+
+
+# ---------------------------------------------------------------------------
+# blackout: published age freezes while the replica keeps serving
+# ---------------------------------------------------------------------------
+
+
+def test_blackout_freezes_published_age():
+    obs = Observability(spans=False)
+    f = FaultSchedule(blackouts=[Blackout(0, 300.0, 1_000.0)])
+    res = run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                    _cfg(), max_ms=60_000.0, staleness_ms=50.0,
+                    faults=f, obs=obs)
+    pubs = {}
+    for e in obs.recorder.entries:
+        if e["kind"] == "publish":
+            pubs.setdefault(e["replica"], []).append(e["t_ms"])
+    # replica 0 is silent across the window; the others keep publishing
+    assert not [t for t in pubs[0] if 300.0 <= t < 1_000.0]
+    assert [t for t in pubs[1] if 300.0 <= t < 1_000.0]
+    # ...but it kept serving: the blackout costs signal, not capacity
+    assert res.per_replica[0]["completed"] > 0
+    assert pubs[0] and min(pubs[0]) < 300.0 and max(pubs[0]) >= 1_000.0
+
+
+# ---------------------------------------------------------------------------
+# crash / restart / hedging: copy-space conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["requeue", "lose"])
+@pytest.mark.parametrize("hedge", [None, HedgePolicy(delay_ms=500.0)])
+def test_crash_conservation(policy, hedge):
+    f = FaultSchedule(crashes=[Crash(1, 400.0, restart_ms=1_200.0,
+                                     policy=policy)])
+    res = run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                    _cfg(), max_ms=60_000.0, faults=f, hedge=hedge)
+    assert conserved_count(res) == res.offered
+    s = res.stats
+    assert s["crashes"] == 1 and s["restarts"] == 1
+    # the crash lands at the in-flight step's boundary, so downtime is
+    # bounded by the nominal window but can start late
+    assert 0.0 < s["downtime_ms"] <= 800.0
+    if policy == "lose":
+        assert s["lost"] > 0 and s["requeued"] == 0
+    else:
+        assert s["requeued"] > 0 and s["lost"] == 0
+    if hedge is not None:
+        assert s["hedges_issued"] > 0
+        assert s["cancelled_hedges"] <= s["hedges_issued"]
+    else:
+        assert s["hedges_issued"] == 0 == s["cancelled_hedges"]
+
+
+def test_crash_without_restart_stays_down():
+    f = FaultSchedule(crashes=[Crash(0, 300.0)])
+    telem = ClusterTelemetry(SLO())
+    fleet = Fleet(_cfg().make_engines(),
+                  make_router("gcr_aware", seed=1, n_pods=2), telem,
+                  faults=f)
+    res = fleet.run(_workload(), max_ms=60_000.0)
+    assert fleet.retired[0]
+    assert conserved_count(res) == res.offered
+    assert res.stats["restarts"] == 0
+    # the dead span bills no replica-ms
+    assert res.per_replica[0]["downtime_ms"] > 0
+    assert res.per_replica[0]["life_ms"] + \
+        res.per_replica[0]["downtime_ms"] == pytest.approx(res.sim_ms)
+
+
+def test_last_replica_refuses_to_crash():
+    f = FaultSchedule(crashes=[Crash(0, 100.0), Crash(1, 100.0)])
+    cfg = dataclasses.replace(_cfg(), n_replicas=2)
+    res = run_fleet(_workload(), make_router("gcr_aware", seed=1, n_pods=2),
+                    cfg, max_ms=60_000.0, faults=f)
+    assert res.stats["crashes"] == 1    # someone must keep serving
+    assert conserved_count(res) == res.offered
+
+
+@pytest.mark.parametrize("policy", ROUTERS)
+def test_conservation_matrix_crash_restart(policy):
+    """Satellite invariant: all six routers conserve copies under
+    crash/restart (requeue and lose) with guard-checked placement."""
+    for crash_policy in ("requeue", "lose"):
+        guarded_case(
+            SEED, "sessions", policy,
+            faults=FaultSchedule(crashes=[
+                Crash(1, 250.0, restart_ms=600.0, policy=crash_policy)]))
+
+
+@pytest.mark.parametrize("policy", ROUTERS)
+def test_conservation_matrix_mid_migration_crash(policy):
+    """A crash landing while scale-in migrations are in flight must not
+    lose the moving copies: the migrate re-arrivals outlive the crash of
+    their *source* and route around the crash of their *destination*."""
+    guarded_case(
+        SEED, "sessions", policy,
+        schedule=(("in", 1), ("none", 0)),
+        faults=FaultSchedule(crashes=[
+            Crash(0, 205.0, restart_ms=700.0),
+            Crash(2, 305.0, policy="lose")]),
+        n_replicas=4)
+
+
+def test_hedge_conservation_with_scale_in():
+    """Hedge twins survive the full interleaving: scale-in migration of
+    a hedged copy marks it cancel-pending in transit and drops it at
+    re-arrival, never double-landing a rid on one engine."""
+    res = guarded_case(
+        SEED, "sessions", "gcr_aware",
+        schedule=(("in", 0), ("out", 0), ("in", 1)),
+        faults=FaultSchedule(crashes=[Crash(1, 305.0, restart_ms=650.0)]),
+        hedge=HedgePolicy(delay_ms=300.0))
+    assert res.stats["hedges_issued"] > 0
+
+
+# ---------------------------------------------------------------------------
+# health plane: ejection determinism + estimator unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_ejection_fires_and_is_deterministic():
+    f = FaultSchedule(limplocks=[Limplock(0, 200.0, 1_200.0, factor=10.0)],
+                      blackouts=[Blackout(0, 200.0, 1_200.0)])
+
+    def go():
+        return run_fleet(_workload(),
+                         make_router("gcr_aware", seed=1, n_pods=2),
+                         _cfg(), max_ms=60_000.0, staleness_ms=50.0,
+                         jitter_ms=5.0, faults=f,
+                         health=HealthPolicy(stale_ms=150.0))
+
+    a, b = go(), go()
+    assert a.stats["ejections"] >= 1      # the sick replica was culled
+    assert a.stats["restorations"] >= 1   # ...and rejoined after the window
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_estimator_ejects_stale_then_restores():
+    pol = HealthPolicy(stale_ms=100.0, min_reports=1)
+    est = HealthEstimator(pol)
+
+    class R:
+        def __init__(self, t, c):
+            self.t_ms, self.completed = t, c
+
+    reports = {0: R(0.0, 10), 1: R(190.0, 10), 2: R(195.0, 10)}
+    for t in (100.0, 200.0):
+        for i in (1, 2):
+            est.observe(i, reports[i], t)
+    ejected, restored = est.evaluate(200.0, reports, [0, 1, 2])
+    assert ejected == (0,) and restored == ()
+    assert est.ejected == frozenset({0})
+    # the replica publishes again -> restored next evaluation
+    reports[0] = R(260.0, 20)
+    est.observe(0, reports[0], 260.0)
+    ejected, restored = est.evaluate(260.0, reports, [0, 1, 2])
+    assert 0 in restored and est.ejected == frozenset()
+
+
+def test_estimator_never_ejects_everyone():
+    pol = HealthPolicy(stale_ms=10.0, min_reports=1, max_eject_frac=0.99)
+    est = HealthEstimator(pol)
+
+    class R:
+        def __init__(self, t, c):
+            self.t_ms, self.completed = t, c
+
+    reports = {i: R(0.0, 5) for i in range(3)}   # all stale at t=500
+    ejected, _ = est.evaluate(500.0, reports, [0, 1, 2])
+    assert len(ejected) <= 2                     # cap = n_live - 1
+
+
+def test_estimator_forget_resets_history():
+    est = HealthEstimator(HealthPolicy(min_reports=1))
+
+    class R:
+        def __init__(self, t, c):
+            self.t_ms, self.completed = t, c
+
+    est.observe(0, R(0.0, 0), 0.0)
+    est.observe(0, R(100.0, 10), 100.0)
+    assert est._n.get(0) == 1
+    est.forget(0)
+    assert 0 not in est._n and 0 not in est._ewma and 0 not in est._last

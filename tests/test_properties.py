@@ -182,6 +182,56 @@ def test_fleet_invariants_fuzzed(seed, kind, router, schedule, cut,
                  staleness_ms=staleness)
 
 
+def _fault_schedules():
+    """Random ``FaultSchedule``s over a 4-replica pool: limp/blackout
+    windows inside the 900 ms workload, crashes with optional restart,
+    both loss policies, plus out-of-pool replica ids (must be inert)."""
+    from repro.cluster import Blackout, Crash, FaultSchedule, Limplock
+    rep = st.integers(0, 5)                  # 4..5 are out-of-pool
+    win = st.tuples(st.floats(0.0, 700.0), st.floats(20.0, 400.0))
+    limps = st.lists(
+        st.builds(lambda r, w, f: Limplock(r, w[0], w[0] + w[1], factor=f),
+                  rep, win, st.floats(2.0, 12.0)),
+        min_size=0, max_size=2)
+    crashes = st.lists(
+        st.builds(lambda r, t, dt, pol: Crash(
+            r, t, restart_ms=(None if dt is None else t + dt), policy=pol),
+            rep, st.floats(50.0, 800.0),
+            st.one_of(st.none(), st.floats(50.0, 500.0)),
+            st.sampled_from(["requeue", "lose"])),
+        min_size=0, max_size=2)
+    blks = st.lists(
+        st.builds(lambda r, w: Blackout(r, w[0], w[0] + w[1]), rep, win),
+        min_size=0, max_size=2)
+    return st.builds(FaultSchedule, limplocks=limps, crashes=crashes,
+                     blackouts=blks)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       router=st.sampled_from(
+           ["round_robin", "least_outstanding", "p2c", "gcr_aware",
+            "affinity", "prefix_aware"]),
+       schedule=_schedules,
+       faults=_fault_schedules(),
+       hedge_ms=st.sampled_from([0.0, 250.0, 600.0]),
+       cut=st.sampled_from([400.0, 900.0, 2_000.0, 60_000.0]),
+       staleness=st.sampled_from([0.0, 80.0]))
+def test_fault_plane_invariants_fuzzed(seed, router, schedule, faults,
+                                       hedge_ms, cut, staleness):
+    """Copy-space conservation, placement liveness, and percentile
+    monotonicity hold under arbitrary interleavings of scale events,
+    limplock, crash/restart (both policies), signal blackouts, hedging,
+    and health-driven ejection (health only when the bus is periodic)."""
+    from repro.cluster import HealthPolicy, HedgePolicy
+    from repro.cluster.invariants import guarded_case
+    guarded_case(
+        seed, "sessions", router, tuple(schedule), max_ms=cut,
+        staleness_ms=staleness, n_replicas=4, faults=faults,
+        health=(HealthPolicy(stale_ms=200.0) if staleness else None),
+        hedge=(HedgePolicy(delay_ms=hedge_ms) if hedge_ms else None))
+
+
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 5_000),
        router=st.sampled_from(["gcr_aware", "affinity", "p2c"]),
