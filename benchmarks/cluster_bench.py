@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import List, Optional, Tuple
 
 import dataclasses
@@ -806,7 +807,15 @@ def main() -> None:
                          "rows plus the collapse-onset window series "
                          "(obs.WINDOW_SCHEMA keys) and full per-cell "
                          "ClusterResult dumps")
+    ap.add_argument("--fast-path", choices=("on", "off"), default="on",
+                    help="'off' forces every run_fleet through the "
+                         "per-step event-calendar path (leap stepping "
+                         "and the SoA loop disabled); CI diffs the full "
+                         "output of on vs off - the paths are "
+                         "contractually bit-identical")
     args = ap.parse_args()
+    if args.fast_path == "off":
+        os.environ["REPRO_FAST_PATH"] = "off"
     sink: dict = {}
     rows = (cluster_collapse(args.smoke, args.jobs)
             + collapse_onset(args.smoke, args.jobs, sink)

@@ -40,6 +40,8 @@ import argparse
 import json
 import os
 import pathlib
+import platform
+import sys
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -57,6 +59,19 @@ DEFAULT_FACTOR = float(os.environ.get("PERF_GUARD_FACTOR", "1.5"))
 
 
 REPS = 3          # best-of-N: the max normalized throughput filters steal
+
+
+def host_fingerprint() -> str:
+    """Identity of the measuring host, recorded per stamp.  Calibration
+    transfers *throughput* across machines, but not perfectly (memory
+    bandwidth, cache sizes, and interpreter builds move the suites and
+    the pure-Python calibration loop differently - the stamp-1-vs-3
+    drift documented in ROADMAP).  The fingerprint lets ``--check`` keep
+    its hard gate for same-host comparisons and downgrade cross-host
+    ones to warnings."""
+    return "/".join([platform.node() or "unknown", platform.machine(),
+                     f"cpu{os.cpu_count()}",
+                     "py%d.%d" % sys.version_info[:2]])
 
 
 def _calibrate(iters: int = 1_000_000) -> float:
@@ -117,11 +132,26 @@ def _fleet_scale64() -> Tuple[float, int]:
         max_ms=300_000.0, router_seed=1))
 
 
+def _fleet_steady1000() -> Tuple[float, int]:
+    """1000 replicas just under capacity: long completion-free decode
+    phases, the regime the leap/SoA fast path exists for.  Banked steps
+    count as simulated events, so this suite's events/sec is exactly
+    what the fast path buys and stays trajectory-gated from its first
+    stamp."""
+    return _fleet_point(GridPoint(
+        tag="guard", workload="poisson", rps=48_000.0,
+        duration_ms=1_500.0, seed=13, router="gcr_aware",
+        n_replicas=1000, active_limit=16, n_pods=2,
+        prompt_range=(128, 512), gen_range=(32, 128),
+        max_ms=60_000.0, router_seed=1))
+
+
 SUITES: List[Tuple[str, Callable[[], Tuple[float, int]]]] = [
     ("engine_run", _engine_run),
     ("fleet_gcr_x2", _fleet_gcr_x2),
     ("fleet_sessions_affinity", _fleet_sessions_affinity),
     ("fleet_scale64", _fleet_scale64),
+    ("fleet_steady1000", _fleet_steady1000),
 ]
 
 
@@ -148,7 +178,8 @@ def measure() -> Dict:
             # machine-independent throughput: events per calibration unit
             "norm_events_per_calib": round(best_norm, 1),
         }
-    return {"calib_s": round(last_calib, 4), "suites": suites}
+    return {"calib_s": round(last_calib, 4), "suites": suites,
+            "host_fingerprint": host_fingerprint()}
 
 
 # -- append-only trajectory ---------------------------------------------------
@@ -265,7 +296,22 @@ def check(factor: float) -> int:
     print_trajectory(history)
     base = history[-1]          # regression gate: latest committed entry
     got = measure()
+    # calibration transfers imperfectly across machines (documented
+    # drift): speed comparisons against a stamp from a *different* host
+    # warn instead of failing; the hard gate applies only when the
+    # latest stamp was measured on this same host.  Structural problems
+    # (missing/unpoliced suites) stay hard either way.
+    base_fp = base.get("host_fingerprint")
+    got_fp = got.get("host_fingerprint")
+    # a stamp with no fingerprint (legacy entry, or a stubbed measure in
+    # tests) cannot prove the host changed, so it keeps the hard gate
+    cross_host = (base_fp is not None and got_fp is not None
+                  and base_fp != got_fp)
+    if cross_host:
+        print(f"perf_guard: cross-host comparison (baseline {base_fp} "
+              f"vs {got_fp}); speed regressions downgrade to warnings")
     failures = []
+    warnings = []
     for name, b in base["suites"].items():
         g = got["suites"].get(name)
         if g is None:
@@ -283,15 +329,20 @@ def check(factor: float) -> int:
                   "goldens' jurisdiction; re-run --write after intentional "
                   "changes)")
         if ratio > factor:
-            failures.append(f"{name}: {ratio:.2f}x slower than baseline")
+            (warnings if cross_host else failures).append(
+                f"{name}: {ratio:.2f}x slower than baseline")
     unpoliced = set(got["suites"]) - set(base["suites"])
     for name in sorted(unpoliced):
         failures.append(f"{name}: measured but absent from the baseline "
                         "(re-run --write to start policing it)")
+    if warnings:
+        print("perf_guard: WARN (cross-host, not gating)\n  "
+              + "\n  ".join(warnings))
     if failures:
         print("perf_guard: FAIL\n  " + "\n  ".join(failures))
         return 1
-    print("perf_guard: all suites within budget")
+    print("perf_guard: all suites within budget"
+          + (" (cross-host: warn-only speed gate)" if cross_host else ""))
     return 0
 
 

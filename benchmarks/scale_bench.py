@@ -37,8 +37,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import json
 import multiprocessing
 import os
+import pathlib
+import pickle
+import subprocess
+import sys
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -179,15 +185,28 @@ def default_jobs() -> int:
 
 
 def run_grid(points: Sequence[GridPoint],
-             jobs: Optional[int] = None) -> List[ClusterResult]:
+             jobs: Optional[int] = None,
+             hosts: Optional[Sequence[str]] = None,
+             shard_dir: Optional[str] = None) -> List[ClusterResult]:
     """Run every point, sharded across a process pool; results come back
     in submission order, bit-identical to sequential execution.
 
     ``jobs=None`` uses ``default_jobs()``; ``jobs<=1``, single-point
     grids, and daemonic contexts (a worker of an outer pool - e.g.
     ``run.py --jobs`` running a suite that itself sweeps) degrade to
-    in-process execution rather than attempting nested pools."""
+    in-process execution rather than attempting nested pools.
+
+    ``hosts`` switches to the multi-host shard mode: the grid is striped
+    into pickled shard files under ``shard_dir`` (a temp dir when None),
+    one worker process is forked per host - ``ssh <host> ...`` for a
+    remote name, a bare local subprocess for ``"local"`` - and the
+    drivers' results are joined back **in submission order** through the
+    same file manifest (see ``write_shards``/``join_shards``).  Each
+    shard worker is this module's own CLI (``--run-shard``), so a
+    sharded sweep is bit-identical to a pooled or sequential one."""
     points = list(points)
+    if hosts:
+        return _run_grid_sharded(points, list(hosts), shard_dir, jobs)
     if jobs is None:
         jobs = default_jobs()
     if jobs <= 1 or len(points) <= 1 \
@@ -198,6 +217,146 @@ def run_grid(points: Sequence[GridPoint],
     # chunksize=1: grid points vary enormously in cost (x0.5 vs x4 load),
     # so fine-grained dispatch keeps the workers balanced
     return _shared_pool(jobs).map(run_point, points, chunksize=1)
+
+
+# ---------------------------------------------------------------------------
+# multi-host shard mode: file-manifest fork/join
+# ---------------------------------------------------------------------------
+#
+# The sweep driver *forks* by striping the grid into pickled shard files
+# plus a JSON manifest inside a directory every worker host can reach
+# (shared filesystem, or plain local disk for "local" workers), launching
+# one `--run-shard` CLI per host, and *joins* by collecting the out-files
+# each worker writes atomically next to its shard.  Every shard row
+# carries its global submission index, so the join reassembles exactly
+# the order `run_grid` promised - regardless of which host finished
+# first.  Remote hosts are assumed to hold the same repo checkout at the
+# same path (the invocation cd's there and sets PYTHONPATH=src).
+
+_MANIFEST = "manifest.json"
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_shards(points: Sequence[GridPoint], n_shards: int,
+                 shard_dir: str) -> str:
+    """Stripe ``points`` round-robin into ``n_shards`` pickled shard
+    files (round-robin balances cost: neighbouring sweep points - e.g.
+    one workload across policies - tend to cost alike) and write the
+    join manifest.  Returns the manifest path."""
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    points = list(points)
+    d = pathlib.Path(shard_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    for si in range(n_shards):
+        payload = [(gi, points[gi])
+                   for gi in range(si, len(points), n_shards)]
+        tmp = d / f".shard_{si:04d}.tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f)
+        os.replace(tmp, d / f"shard_{si:04d}.pkl")
+    manifest = {"format": 1, "n_shards": n_shards,
+                "n_points": len(points)}
+    tmp = d / (".%s.tmp" % _MANIFEST)
+    tmp.write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp, d / _MANIFEST)
+    return str(d / _MANIFEST)
+
+
+def run_shard(shard_dir: str, shard_idx: int,
+              jobs: Optional[int] = None) -> str:
+    """Worker half of the fork/join: run shard ``shard_idx`` of
+    ``shard_dir`` (optionally through this host's own process pool) and
+    atomically write ``out_XXXX.pkl`` rows of ``(global_idx, result)``.
+    Returns the out-file path."""
+    d = pathlib.Path(shard_dir)
+    with open(d / f"shard_{shard_idx:04d}.pkl", "rb") as f:
+        payload = f.read()
+    rows = pickle.loads(payload)
+    results = run_grid([pt for _gi, pt in rows], jobs=jobs)
+    out = [(gi, res) for (gi, _pt), res in zip(rows, results)]
+    tmp = d / f".out_{shard_idx:04d}.tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(out, f)
+    dst = d / f"out_{shard_idx:04d}.pkl"
+    os.replace(tmp, dst)
+    return str(dst)
+
+
+def join_shards(shard_dir: str, timeout_s: float = 0.0,
+                poll_s: float = 0.5) -> List[ClusterResult]:
+    """Join half of the fork/join: wait (up to ``timeout_s``; 0 = one
+    immediate look) for every shard's out-file, then reassemble results
+    in global submission order.  Raises if any shard never reported or
+    any index is missing - a partial join is never silently returned."""
+    d = pathlib.Path(shard_dir)
+    manifest = json.loads((d / _MANIFEST).read_text())
+    n_shards, n_points = manifest["n_shards"], manifest["n_points"]
+    paths = [d / f"out_{si:04d}.pkl" for si in range(n_shards)]
+    deadline = time.monotonic() + timeout_s  # lint: disable=R101(fork/join harness deadline over real child processes - wall clock is the correct clock here)
+    while True:
+        missing = [p.name for p in paths if not p.exists()]
+        if not missing:
+            break
+        if time.monotonic() >= deadline:  # lint: disable=R101(fork/join harness deadline over real child processes - wall clock is the correct clock here)
+            raise RuntimeError(
+                f"join_shards: missing shard results {missing}")
+        time.sleep(poll_s)
+    results: List[Optional[ClusterResult]] = [None] * n_points
+    filled = 0
+    for p in paths:
+        with open(p, "rb") as f:
+            for gi, res in pickle.load(f):
+                results[gi] = res
+                filled += 1
+    if filled != n_points or any(r is None for r in results):
+        raise RuntimeError("join_shards: incomplete shard coverage")
+    return results  # type: ignore[return-value]
+
+
+def shard_commands(shard_dir: str, n_shards: int,
+                   hosts: Sequence[str],
+                   jobs: Optional[int] = None) -> List[List[str]]:
+    """The per-shard invocation lines of the fork step.  Host ``i % len``
+    gets shard ``i``; a host named ``local`` (or empty) runs as a bare
+    subprocess of this interpreter, anything else becomes
+    ``ssh <host> 'cd <repo> && PYTHONPATH=src python benchmarks/...'``
+    against the same checkout path on that host."""
+    me = str(pathlib.Path(__file__).resolve())
+    cmds: List[List[str]] = []
+    for si in range(n_shards):
+        host = hosts[si % len(hosts)]
+        argv = [sys.executable, me, "--run-shard", str(si),
+                "--shard-dir", str(shard_dir)]
+        if jobs is not None:
+            argv += ["--jobs", str(jobs)]
+        if host in ("local", "localhost", ""):
+            cmds.append(argv)
+        else:
+            remote = (f"cd {_REPO_ROOT} && PYTHONPATH=src "
+                      + " ".join(["python"] + argv[1:]))
+            cmds.append(["ssh", host, remote])
+    return cmds
+
+
+def _run_grid_sharded(points: List[GridPoint], hosts: List[str],
+                      shard_dir: Optional[str],
+                      jobs: Optional[int]) -> List[ClusterResult]:
+    import tempfile
+    if shard_dir is None:
+        shard_dir = tempfile.mkdtemp(prefix="scale_shards_")
+    n_shards = len(hosts)
+    write_shards(points, n_shards, shard_dir)
+    env = dict(os.environ)
+    src = str(_REPO_ROOT / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    procs = [subprocess.Popen(cmd, env=env)
+             for cmd in shard_commands(shard_dir, n_shards, hosts, jobs)]
+    codes = [p.wait() for p in procs]
+    bad = [i for i, c in enumerate(codes) if c != 0]
+    if bad:
+        raise RuntimeError(f"shard workers {bad} exited non-zero")
+    return join_shards(shard_dir)
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +384,9 @@ def _base_point(**kw) -> GridPoint:
 
 
 def scale_sweep(smoke: bool = False,
-                jobs: Optional[int] = None) -> List[Row]:
+                jobs: Optional[int] = None,
+                hosts: Optional[Sequence[str]] = None,
+                shard_dir: Optional[str] = None) -> List[Row]:
     """Collapse + affinity curves at 64 replicas, >= 100k session turns."""
     spec = WorkloadSpec(prompt_range=PROMPTS, gen_range=GENS, n_pods=2)
     cost = knee_cost(spec, LIMIT, oversub=2.0)
@@ -252,7 +413,9 @@ def scale_sweep(smoke: bool = False,
             duration_ms=sess_duration, router=rname,
             prefill_ms_per_tok=0.05, prefix_cache_tokens=120_000))
 
-    results = dict(zip([p.tag for p in points], run_grid(points, jobs)))
+    results = dict(zip([p.tag for p in points],
+                       run_grid(points, jobs, hosts=hosts,
+                                shard_dir=shard_dir)))
 
     rows: List[Row] = [("scale/est_capacity_rps", cap, ""),
                        ("scale/n_replicas", float(N_REPLICAS), ""),
@@ -296,16 +459,154 @@ def scale_sweep(smoke: bool = False,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# 1000-replica / multi-million-request mega tier
+# ---------------------------------------------------------------------------
+#
+# The order of magnitude the leap-stepping + SoA hot path buys: the same
+# collapse and affinity claims as the 64-replica headline, re-asserted at
+# 1000 replicas over millions of requests.  Smoke mode keeps the full
+# 1000-replica pool but cuts the trace length so CI can assert request
+# conservation at that width in seconds (the throughput-shape claims need
+# the long trace and stay full-tier-only).
+
+MEGA_REPLICAS = 1000
+
+
+def mega_points(smoke: bool = False) -> List[GridPoint]:
+    """The mega grid: collapse trio at x0.5/x2.0 plus the session pair,
+    all at 1000 replicas (tags are ``mega/...``)."""
+    spec = WorkloadSpec(prompt_range=PROMPTS, gen_range=GENS, n_pods=2)
+    cost = knee_cost(spec, LIMIT, oversub=2.0)
+    cap = est_capacity_rps(spec, LIMIT, MEGA_REPLICAS, cost)
+    duration_ms = 400.0 if smoke else 8_000.0
+    max_ms = 30_000.0 if smoke else 120_000.0
+    points = [_base_point(tag=f"mega/{rname}/{adm}/x{mult:g}",
+                          workload="poisson", rps=cap * mult,
+                          duration_ms=duration_ms, router=rname,
+                          admission=adm, n_replicas=MEGA_REPLICAS,
+                          max_ms=max_ms)
+              for mult in (0.5, 2.0) for rname, adm in COLLAPSE_POLICIES]
+    sess_duration = 400.0 if smoke else 8_000.0
+    for rname in ("gcr_aware", "affinity"):
+        points.append(_base_point(
+            tag=f"mega/sessions/{rname}", workload="sessions",
+            rps=2.0 * cap, duration_ms=sess_duration, router=rname,
+            n_replicas=MEGA_REPLICAS, max_ms=max_ms,
+            prefill_ms_per_tok=0.05, prefix_cache_tokens=120_000))
+    return points
+
+
+def mega_rows(points: Sequence[GridPoint],
+              results: Sequence[ClusterResult],
+              smoke: bool = False) -> List[Row]:
+    """Row emission + claims for a completed mega grid.  Conservation is
+    asserted at every point in both tiers; the collapse/affinity shape
+    claims and the multi-million-request floor only at the full tier."""
+    by_tag = dict(zip([p.tag for p in points], results))
+    total_requests = 0
+    rows: List[Row] = [("mega/n_replicas", float(MEGA_REPLICAS), "")]
+    for pt in points:
+        res = by_tag[pt.tag]
+        assert_conserved(res, pt.tag)
+        n_req = res.offered
+        total_requests += n_req
+        rows.append((f"{pt.tag}_requests", float(n_req), ""))
+        rows.append((f"{pt.tag}_tok_s", res.token_throughput, ""))
+        rows.append((f"{pt.tag}_goodput_tok_s", res.goodput_tok_s, ""))
+        rows.append((f"{pt.tag}_events", res.stats["sim_events"], ""))
+    rows.append(("mega/total_requests", float(total_requests), ""))
+    if smoke:
+        return rows
+
+    def tput(rname, adm, mult):
+        return by_tag[f"mega/{rname}/{adm}/x{mult:g}"].token_throughput
+
+    blind_loss = 1.0 - (tput("round_robin", "none", 2.0)
+                        / max(tput("round_robin", "none", 0.5), 1e-9))
+    aware_dip = 1.0 - (tput("gcr_aware", "gcr", 2.0)
+                       / max(tput("gcr_aware", "gcr", 0.5), 1e-9))
+    rows.append(("mega/claims/blind_loss_past_sat", blind_loss, ""))
+    rows.append(("mega/claims/aware_dip_past_sat", aware_dip, ""))
+    assert blind_loss >= 0.30, \
+        f"1000-replica blind routing should collapse (lost {blind_loss:.0%})"
+    assert aware_dip <= 0.10, \
+        f"1000-replica gcr_aware should hold peak (dipped {aware_dip:.0%})"
+    assert total_requests >= 2_000_000, \
+        f"mega tier must stay multi-million-request (got {total_requests})"
+    aff = by_tag["mega/sessions/affinity"]
+    base = by_tag["mega/sessions/gcr_aware"]
+    rows.append(("mega/claims/affinity_goodput_gain",
+                 aff.goodput_tok_s / max(base.goodput_tok_s, 1e-9), ""))
+    rows.append(("mega/claims/affinity_hit_gain",
+                 aff.stats["prefix_hit_rate"]
+                 - base.stats["prefix_hit_rate"], ""))
+    assert aff.stats["prefix_hit_rate"] > base.stats["prefix_hit_rate"], \
+        "affinity must raise the 1000-replica fleet prefix hit rate"
+    assert aff.goodput_tok_s > base.goodput_tok_s, \
+        "affinity should out-goodput gcr_aware at 1000 replicas"
+    return rows
+
+
+def mega_sweep(smoke: bool = False, jobs: Optional[int] = None,
+               hosts: Optional[Sequence[str]] = None,
+               shard_dir: Optional[str] = None) -> List[Row]:
+    """Collapse + affinity claims at 1000 replicas (see ``mega_points``)."""
+    pts = mega_points(smoke)
+    return mega_rows(pts, run_grid(pts, jobs, hosts=hosts,
+                                   shard_dir=shard_dir), smoke)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced collapse grid (still 64 replicas and the "
-                         "full >=100k-request session trace)")
+                         "full >=100k-request session trace); with --mega, "
+                         "the short-trace 1000-replica conservation tier")
+    ap.add_argument("--mega", action="store_true",
+                    help="1000-replica / multi-million-request tier")
     ap.add_argument("--jobs", type=int, default=None,
                     help="process-pool width (default: CPU count)")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated shard hosts for the multi-host "
+                         "mode ('local' entries fork plain subprocesses)")
+    ap.add_argument("--shard-dir", default=None,
+                    help="shared directory for shard manifests/results")
+    ap.add_argument("--write-shards", type=int, default=None,
+                    metavar="N", help="fork step only: write the selected "
+                    "sweep's grid as N shards into --shard-dir and exit")
+    ap.add_argument("--run-shard", type=int, default=None, metavar="I",
+                    help="worker verb: run shard I of --shard-dir and exit")
+    ap.add_argument("--join-shards", action="store_true",
+                    help="join step only: collect shard results from "
+                         "--shard-dir and emit the sweep rows")
     args = ap.parse_args()
+    hosts = args.hosts.split(",") if args.hosts else None
+
+    if args.run_shard is not None:
+        if not args.shard_dir:
+            ap.error("--run-shard requires --shard-dir")
+        run_shard(args.shard_dir, args.run_shard, jobs=args.jobs)
+        return
+    if args.write_shards is not None or args.join_shards:
+        if not args.shard_dir:
+            ap.error("shard verbs require --shard-dir")
+        if not args.mega:
+            ap.error("shard verbs operate on the --mega grid")
+        pts = mega_points(smoke=args.smoke)
+        if args.write_shards is not None:
+            write_shards(pts, args.write_shards, args.shard_dir)
+            return
+        rows = mega_rows(pts, join_shards(args.shard_dir),
+                         smoke=args.smoke)
+    elif args.mega:
+        rows = mega_sweep(smoke=args.smoke, jobs=args.jobs, hosts=hosts,
+                          shard_dir=args.shard_dir)
+    else:
+        rows = scale_sweep(smoke=args.smoke, jobs=args.jobs, hosts=hosts,
+                           shard_dir=args.shard_dir)
     print("name,value,derived")
-    for name, val, derived in scale_sweep(smoke=args.smoke, jobs=args.jobs):
+    for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
 
 

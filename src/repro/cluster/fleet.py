@@ -42,9 +42,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
 from dataclasses import dataclass
 from operator import attrgetter
 from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
 
 from ..serving.engine import (PrefixCache, Request, SimServeEngine,
                               StepCostModel, make_admission)
@@ -60,6 +63,46 @@ from .workload import WorkloadSpec
 __all__ = ["Fleet", "FleetConfig", "FleetTopology", "QueueDepthAutoscaler",
            "SLOAutoscaler", "ScaleDecision", "MigrationCost", "knee_cost",
            "est_capacity_rps", "run_fleet"]
+
+
+class _Seq:
+    """Event tie-break sequence counter with O(1) bulk advance.
+
+    Drop-in for ``itertools.count()`` in the fast event loop: a leap
+    chain consumes the same sequence numbers the per-step loop's k step
+    pushes would have (``n += k``), and a truncation refunds the
+    rolled-back tail, so admin-vs-step heap tie comparisons see exactly
+    the legacy ordering.  The legacy loop keeps ``itertools.count`` (C
+    speed; it never bulk-advances)."""
+
+    __slots__ = ("n",)
+
+    def __init__(self, start: int = 0) -> None:
+        self.n = start
+
+    def __next__(self) -> int:
+        v = self.n
+        self.n = v + 1
+        return v
+
+
+class _FleetSoA:
+    """Struct-of-arrays mirror of the routable fleet's occupancy gauges
+    (DESIGN.md 3).
+
+    Full-size float64 arrays indexed by *replica idx* (never compacted:
+    retired entries simply go stale and are excluded from ``live`` /
+    ``groups``).  ``glim`` holds NaN for unlimited replicas
+    (``NoAdmission``) - vectorized policies test it and fall back to the
+    scan the slow path would run.  Rebuilt only on scaling events; the
+    fast loop updates ``ga``/``gp`` in place (per mutation on a live
+    bus, at publish events on a periodic one), so the arrays always
+    carry exactly the values the ``ReplicaView`` properties would
+    return."""
+
+    __slots__ = ("ga", "gp", "glim", "live", "alive", "groups",
+                 "group_nan", "group_lim", "group_homo", "group_lim0",
+                 "live_nan", "n_pods")
 
 
 def _in_window(wins, t: float) -> bool:
@@ -120,6 +163,9 @@ class FleetConfig:
     # per-replica prefix-cache budget in tokens; 0 disables the cache
     # (legacy behavior, bit-identical to pre-cache runs)
     prefix_cache_tokens: int = 0
+    # steady-state leap stepping on the member engines (DESIGN.md 3);
+    # bit-identical either way, False forces per-step iteration
+    leap_stepping: bool = True
 
     def limit_for(self, idx: Optional[int] = None) -> int:
         if self.active_limits and idx is not None:
@@ -139,7 +185,8 @@ class FleetConfig:
                              promote_every=self.promote_every)
         pc = (PrefixCache(self.prefix_cache_tokens)
               if self.prefix_cache_tokens > 0 else None)
-        return SimServeEngine(adm, cost=self.cost_for(idx), prefix_cache=pc)
+        return SimServeEngine(adm, cost=self.cost_for(idx), prefix_cache=pc,
+                              leap_stepping=self.leap_stepping)
 
     def make_engines(self) -> List[SimServeEngine]:
         return [self.make_engine(i) for i in range(self.n_replicas)]
@@ -157,9 +204,16 @@ class Fleet:
                  topology: Optional[FleetTopology] = None,
                  obs=None, faults: Optional[FaultSchedule] = None,
                  health: Optional[HealthPolicy] = None,
-                 hedge: Optional[HedgePolicy] = None) -> None:
+                 hedge: Optional[HedgePolicy] = None,
+                 soa_fast_path: bool = True) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
+        # struct-of-arrays fast event loop (DESIGN.md 3): used when the
+        # control plane is quiet enough to prove bit-identity (no obs
+        # tracing, no faults, no health ejection, no hedging, and every
+        # replica is a real SimServeEngine); False forces the legacy
+        # single-heap loop - same observables either way
+        self.soa_fast_path = soa_fast_path
         self.replicas = replicas
         self.router = router
         # one replica<->pod partition for router, controller, telemetry:
@@ -206,6 +260,11 @@ class Fleet:
         self._heap: list = []
         self._arrivals: List[Request] = []
         self._seq = itertools.count()
+        # admin-barrier mirror (fast loop only): a plain min-heap of the
+        # pending publish/scale event *times*, maintained by _push, so
+        # the leap horizon is one peek.  None disables the mirror.
+        self._abar: Optional[list] = None
+        self._soa: Optional[_FleetSoA] = None
         self._stepping: List[bool] = []
         self._step_end: List[float] = []
         self._work = 0          # pending arrive/step/migrate events
@@ -255,6 +314,9 @@ class Fleet:
     def _push(self, t: float, kind: str, payload) -> None:
         if kind in ("arrive", "step", "migrate"):
             self._work += 1
+        elif self._abar is not None and kind in ("publish", "scale"):
+            # mirror admin-event times for the fast loop's leap horizon
+            heapq.heappush(self._abar, t)  # lint: disable=R203(time-only mirror read via min(); equal entries are interchangeable, nothing to tie-break)
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     # -- scaling -------------------------------------------------------------
@@ -566,8 +628,18 @@ class Fleet:
         # to one run's scale history.
         self.router.reset()
         self.topology.begin_run()
+        # fast-loop eligibility: every gate is a feature whose hooks read
+        # per-step state the SoA loop provably never produces (spans,
+        # fault pops, health ticks, hedge twins); autoscalers and the
+        # periodic bus are fine - the admin barrier bounds leaps at them
+        fast = (self.soa_fast_path and self.obs is None
+                and self.faults is None and self.health is None
+                and self.hedge is None
+                and all(isinstance(e, SimServeEngine)
+                        for e in self.replicas))
         self._heap = []
-        self._seq = itertools.count()
+        self._abar = [] if fast else None
+        self._seq = _Seq() if fast else itertools.count()
         self._stepping = [False] * len(self.replicas)
         self._step_end = [0.0] * len(self.replicas)
         self._migrating = 0
@@ -603,6 +675,8 @@ class Fleet:
         if self.faults is not None:
             for t_f, op, f in self.faults.events():
                 self._push(t_f, "fault", (op, f))
+        if fast:
+            return self._run_fast(max_ms)
 
         now = 0.0
         injected = 0
@@ -839,6 +913,10 @@ class Fleet:
                                     "scale", None))
         self._work = work
         self._migrating = migrating
+        return self._finalize(now, injected, events)
+
+    def _finalize(self, now: float, injected: int,
+                  events: int) -> ClusterResult:
         # offered = requests that actually arrived before the max_ms cutoff,
         # so completed + live + migrating == offered for any (workload,
         # max_ms).  Step effects are banked at step start, so a truncated
@@ -849,6 +927,7 @@ class Fleet:
                            if self._stepping[i]])
         self._events = events
         windows = None
+        obs = self.obs
         if obs is not None:
             obs.finish(end)
             windows = obs.windows
@@ -856,11 +935,326 @@ class Fleet:
                                        migrating=self._migrating,
                                        events=events,
                                        topology=self.topology,
-                                       pod_arrivals=dict(pod_arrivals),
+                                       pod_arrivals=dict(
+                                           self.bus.pod_arrivals),
                                        windows=windows,
                                        hedges_issued=self._hedges_issued,
                                        cancelled_hedges=(
                                            self._cancelled_hedges))
+
+    # -- struct-of-arrays fast loop (DESIGN.md 3) ----------------------------
+    def _soa_rebuild(self) -> _FleetSoA:
+        """(Re)build the gauge arrays and pod partition from the current
+        pool.  Called on entry and after every scaling event - never on
+        the per-event hot path.  Initial values come through the
+        ``ReplicaView`` properties, so live and periodic buses both seed
+        exactly what the slow path would read."""
+        soa = _FleetSoA()
+        n = len(self.replicas)
+        views_all = self.bus.views
+        ga = np.empty(n)
+        gp = np.empty(n)
+        glim = np.empty(n)
+        for i in range(n):
+            v = views_all[i]
+            ga[i] = v.num_active
+            gp[i] = v.num_parked
+            lim = v.active_limit
+            glim[i] = np.nan if lim is None else lim
+        live = np.array(self.live_indices(), dtype=np.intp)
+        alive = np.zeros(n, dtype=bool)
+        alive[live] = True
+        # partition with the router's topology when it carries one (the
+        # slow path's group scan uses exactly that map)
+        rtopo = getattr(self.router, "topology", None) or self.topology
+        pod_of = rtopo.pod_of
+        groups = {}
+        group_nan = {}
+        group_lim = {}
+        group_homo = {}
+        group_lim0 = {}
+        for pod in range(rtopo.n_pods):
+            g = [int(i) for i in live if pod_of(int(i)) == pod]
+            garr = np.array(g, dtype=np.intp) if g else live
+            groups[pod] = garr
+            lims = glim[garr]
+            group_nan[pod] = bool(np.isnan(lims).any())
+            group_lim[pod] = lims
+            # the overwhelmingly common pool is one shared limit; route
+            # scans then drop their normalizing division (same argmin,
+            # proven order-preserving) - precompute the flag here, off
+            # the per-arrival path
+            homo = (not group_nan[pod] and lims.size > 0
+                    and bool((lims == lims[0]).all()))
+            group_homo[pod] = homo
+            group_lim0[pod] = float(lims[0]) if homo else 0.0
+        soa.ga, soa.gp, soa.glim = ga, gp, glim
+        soa.live, soa.alive = live, alive
+        soa.groups, soa.group_nan = groups, group_nan
+        soa.group_lim, soa.group_homo = group_lim, group_homo
+        soa.group_lim0 = group_lim0
+        soa.live_nan = bool(np.isnan(glim[live]).any())
+        soa.n_pods = rtopo.n_pods
+        self._soa = soa
+        return soa
+
+    def _run_fast(self, max_ms: float) -> ClusterResult:
+        """Struct-of-arrays steady-state event loop.
+
+        Preconditions (gated in ``run()``): no obs tracing, no fault
+        plane, no health ejection, no hedging.  Per-replica next step
+        boundaries live in one float64 array (``nb``; inf = idle)
+        scanned with a cached vectorized argmin, so the heap sequences
+        only publish/scale/migrate events; each boundary asks its engine
+        to leap a whole steady-state chain (``step_leap``), bounded by
+        the admin-barrier mirror ``_abar`` so no control-plane read can
+        observe mid-chain state.  An arrival or migrant landing on a
+        mid-chain replica rolls the unobserved tail back
+        (``leap_truncate``) - integer-exact, so the trace stays
+        bit-identical to the per-step loop.
+
+        Tie contract vs the legacy single-heap loop: arrivals win every
+        time tie (legacy pops heap events only when strictly earlier);
+        boundary-vs-heap ties compare the same push sequence numbers the
+        legacy heap would have compared (chains bulk-consume their
+        boundaries' numbers, truncation refunds the rolled-back tail);
+        equal-time boundaries of distinct replicas process in index
+        order, observably commutative while the control plane is quiet
+        (engines never read each other, and every cross-replica reader -
+        router gauges, publishes, scale ticks - sits at an arrival or
+        admin event, never between same-time steps)."""
+        inf = float("inf")
+        heap = self._heap
+        abar = self._abar
+        arrivals = self._arrivals
+        replicas = self.replicas
+        retired = self.retired
+        router = self.router
+        route = router.route
+        rsoa = getattr(router, "route_soa", None)
+        bus = self.bus
+        bus_live = bus.live
+        reports = bus.reports
+        pod_arrivals = bus.pod_arrivals
+        topo_pods = self.topology.n_pods
+        for p in range(topo_pods):
+            pod_arrivals.setdefault(p, 0)
+        heappop = heapq.heappop
+        seqc = self._seq
+        work = self._work
+        migrating = self._migrating
+        pub_alive = self._pub_alive
+
+        n = len(replicas)
+        nb = np.full(n, inf)     # next step boundary per replica
+        sseq = [0] * n           # that boundary's legacy push sequence
+        soa = self._soa_rebuild()
+        ga, gp = soa.ga, soa.gp
+        views = self._route_views
+
+        now = 0.0
+        injected = 0
+        events = 0
+        imin = 0
+        tn = inf                 # cached min(nb) and its argmin
+        dirty = False
+        ai, n_arr = 0, len(arrivals)
+        # heap-top / next-arrival caches: the heap mutates only inside
+        # the heap-event branch and arrivals only advance on consumption,
+        # so both are loop-invariant everywhere else
+        th = heap[0][0] if heap else inf
+        ta = arrivals[0].arrive_ms if n_arr else inf
+        while True:
+            if dirty:
+                imin = int(nb.argmin())
+                # plain float: tn feeds `now`, engine clocks, and
+                # telemetry - np.float64 must never leak into the trace
+                tn = float(nb[imin])
+                dirty = False
+            if ta <= th and ta <= tn:
+                if ta == inf:
+                    break
+                t, kind = ta, 0                     # arrival
+            elif th < tn:
+                t, kind = th, 1                     # heap event
+            elif tn < th:
+                t, kind = tn, 2                     # step boundary
+            elif tn == inf:
+                break
+            else:
+                # exact boundary/heap time tie: the smaller push sequence
+                # pops first, exactly as the legacy heap ordered it
+                hseq = heap[0][1]
+                bi, bseq = -1, None
+                for j in np.nonzero(nb == tn)[0]:
+                    if bseq is None or sseq[j] < bseq:
+                        bi, bseq = int(j), sseq[j]
+                if hseq < bseq:
+                    t, kind = th, 1
+                else:
+                    t, kind = tn, 2
+                    imin = bi
+            if t > max_ms:
+                break
+            events += 1
+
+            if kind == 2:                           # step boundary
+                i = imin
+                work -= 1
+                now = t
+                dirty = True
+                eng = replicas[i]
+                if eng.active and not retired[i]:
+                    end, done, k = eng.step_leap(
+                        t, bank_le=max_ms,
+                        end_le=abar[0] if abar else inf)
+                    seqc.n += k
+                    sseq[i] = seqc.n - 1
+                    events += k - 1
+                    if end > t:
+                        nb[i] = end
+                        work += 1
+                    else:
+                        nb[i] = inf
+                    if done and bus_live:
+                        # gauges move only on a completion step (release,
+                        # work-conserve, periodic promote); a completion-
+                        # free step leaves both exactly as the slow path
+                        # would have left them
+                        ga[i] = len(eng.active)
+                        gp[i] = eng.admission.num_parked
+                else:
+                    nb[i] = inf
+                continue
+
+            if kind == 0:                           # arrival
+                payload = arrivals[ai]
+                ai += 1
+                ta = arrivals[ai].arrive_ms if ai < n_arr else inf
+                work -= 1
+                now = t
+                injected += 1
+                bus.arrivals += 1
+                pod_arrivals[payload.pod % topo_pods] += 1
+            else:                                   # heap event
+                t, hseq, hkind, payload = heappop(heap)
+                if hkind == "publish":
+                    heappop(abar)
+                    i = payload
+                    if not retired[i]:
+                        bus.publish(i, t)
+                        rep = reports[i]
+                        ga[i] = rep.num_active
+                        gp[i] = rep.num_parked
+                        if work > 0:
+                            self._work = work
+                            self._push(bus.next_publish_ms(t),
+                                       "publish", i)
+                            work = self._work
+                        else:
+                            pub_alive[i] = False
+                    else:
+                        pub_alive[i] = False
+                    th = heap[0][0] if heap else inf
+                    continue
+                if hkind == "scale":
+                    heappop(abar)
+                    self._work = work
+                    self._migrating = migrating
+                    # the scale paths and controllers read the legacy
+                    # per-replica stepping mirrors: sync them from nb
+                    stepping = self._stepping
+                    step_end = self._step_end
+                    for j in range(n):
+                        b = nb[j]
+                        if b < inf:
+                            stepping[j] = True
+                            step_end[j] = float(b)
+                        else:
+                            stepping[j] = False
+                    decision = (self.autoscaler(self, t)
+                                if self.autoscaler else None)
+                    if isinstance(decision, SimServeEngine):
+                        decision = ScaleDecision(add=decision)
+                    if decision is not None:
+                        if decision.add is not None:
+                            self._scale_out(decision.add, t, decision.pod)
+                        elif decision.remove is not None:
+                            self._scale_in(decision.remove, t)
+                    work = self._work
+                    migrating = self._migrating
+                    if work > 0:
+                        self._work = work
+                        self._push(t + self.autoscale_every_ms,
+                                   "scale", None)
+                        work = self._work
+                    if decision is not None:
+                        if len(replicas) != n:
+                            grow = len(replicas) - n
+                            nb = np.concatenate([nb, np.full(grow, inf)])
+                            sseq.extend([0] * grow)
+                            n = len(replicas)
+                        soa = self._soa_rebuild()
+                        ga, gp = soa.ga, soa.gp
+                        views = self._route_views
+                        dirty = True
+                    th = heap[0][0] if heap else inf
+                    continue
+                # migrate: a drained stream re-arrives at the router
+                th = heap[0][0] if heap else inf
+                work -= 1
+                now = t
+                migrating -= 1
+
+            # shared submit path (arrive + migrate)
+            i = rsoa(payload, soa, views) if rsoa is not None \
+                else route(payload, views)
+            payload.replica = i
+            eng = replicas[i]
+            if nb[i] < inf and eng._leap is not None:
+                # mid-chain landing: the engine rewinds the not-yet-due
+                # banked tail for the submit and keeps the chain when the
+                # request merely parks; a rollback > 0 (activation) owes
+                # the same event-count and push-sequence refunds a
+                # per-step loop would never have spent
+                e, u, _ = eng.leap_submit(payload, t)
+                if u:
+                    events -= u
+                    sseq[i] -= u
+                    nb[i] = e
+                    if e < tn:          # boundary moved earlier; the
+                        imin, tn = i, e  # cached min can only improve
+            else:
+                eng.submit(payload)
+            if nb[i] == inf and eng.active:
+                end, done, k = eng.step_leap(
+                    t, bank_le=max_ms, end_le=abar[0] if abar else inf)
+                seqc.n += k
+                sseq[i] = seqc.n - 1
+                events += k - 1
+                if end > t:
+                    nb[i] = end
+                    work += 1
+                    if end < tn:
+                        imin, tn = i, end
+                    elif i == imin:
+                        dirty = True
+            if bus_live:
+                ga[i] = len(eng.active)
+                gp[i] = eng.admission.num_parked
+
+        self._work = work
+        self._migrating = migrating
+        stepping = self._stepping
+        step_end = self._step_end
+        for j in range(len(replicas)):
+            b = nb[j]
+            if b < inf:
+                stepping[j] = True
+                step_end[j] = float(b)
+            else:
+                stepping[j] = False
+        return self._finalize(now, injected, events)
 
 
 def run_fleet(requests: List[Request], router: Union[Router, str],
@@ -880,7 +1274,8 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
               obs=None,
               faults: Optional[FaultSchedule] = None,
               health: Optional[HealthPolicy] = None,
-              hedge: Optional[HedgePolicy] = None) -> ClusterResult:
+              hedge: Optional[HedgePolicy] = None,
+              soa_fast_path: bool = True) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
     ``router`` is a built ``Router`` or a policy name; a name is resolved
@@ -906,8 +1301,19 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
     ``obs``, leaving them off is bit-identical to a build without them.
     ``health`` requires ``staleness_ms`` > 0 - ejection judges the
     published gauges, so it needs a periodic bus to read.
+    ``soa_fast_path`` forces the struct-of-arrays event loop off when
+    False (A/B digest checks; the loops are bit-identical by contract).
     """
     cfg = cfg or FleetConfig()
+    if os.environ.get("REPRO_FAST_PATH", "").lower() in ("off", "0"):
+        # global A/B kill switch (cluster_bench --fast-path off, CI digest
+        # checks): every run through this chokepoint - including pooled
+        # bench workers, which inherit the env - takes the per-step
+        # event-calendar path the fast paths are contractually
+        # bit-identical to
+        soa_fast_path = False
+        if cfg.leap_stepping:
+            cfg = dataclasses.replace(cfg, leap_stepping=False)
     slo = slo or SLO()
     if health is not None and staleness_ms <= 0.0:
         raise ValueError("health ejection reads the periodic published "
@@ -929,5 +1335,5 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
                              season_period_ms=season_period_ms)
     fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
                   bus=bus, topology=topo, obs=obs, faults=faults,
-                  health=health, hedge=hedge)
+                  health=health, hedge=hedge, soa_fast_path=soa_fast_path)
     return fleet.run(requests, max_ms=max_ms)

@@ -79,6 +79,16 @@ class Router:
     # scan actually computed
     tracer = None
 
+    # vectorized twin of ``route`` for the fleet's SoA fast loop: reads
+    # the fleet-maintained gauge arrays (``fleet._FleetSoA``) instead of
+    # per-view property chains, bit-identical placement by construction
+    # (small integer gauges are exact in float64, divisions see the same
+    # operands, and np.argmin's first-occurrence rule is the strict-<
+    # lowest-index tie-break every scan below uses).  None = no
+    # vectorized form; the fast loop falls back to ``route`` with the
+    # same live views the slow loop passes.
+    route_soa = None
+
     def route(self, req, views: Sequence[ReplicaView]) -> int:
         raise NotImplementedError
 
@@ -122,6 +132,12 @@ class LeastOutstandingRouter(Router):
             if out < best_out:
                 best, best_out = v, out
         return best.idx
+
+    def route_soa(self, req, soa, views: Sequence[ReplicaView]) -> int:
+        live = soa.live
+        # outstanding = active + parked; argmin keeps the first (lowest
+        # idx - live is ascending) on ties, matching the scan above
+        return int(live[int(np.argmin(soa.ga[live] + soa.gp[live]))])
 
 
 class PowerOfTwoRouter(Router):
@@ -257,6 +273,35 @@ class GCRAwareRouter(Router):
             tracer.note_scores(self.name, scores)
         return free_idx if free_idx >= 0 else park_idx
 
+    def route_soa(self, req, soa, views: Sequence[ReplicaView]) -> int:
+        if self.tracer is not None:
+            # scoring trace wants the per-candidate keys of the scalar
+            # scan; tracing runs never take the fast loop anyway
+            return self.route(req, views)
+        pod = req.pod % self.n_pods
+        g = soa.groups[pod]
+        if soa.group_homo[pod]:
+            # shared limit: -head/limit is order- and tie-preserving in
+            # -head, and headroom argmax is actives argmin (x -> lim - x
+            # is strictly decreasing, equal actives give equal headroom),
+            # so the free winner is the first-occurrence least-active
+            # replica and the park winner plain argmin of the queue
+            gag = soa.ga[g]
+            j = int(gag.argmin())
+            if gag[j] < soa.group_lim0[pod]:
+                return int(g[j])
+            return int(g[int(soa.gp[g].argmin())])
+        if soa.group_nan[pod]:
+            # unlimited replica in the pod: least-outstanding in-pod
+            return int(g[int((soa.ga[g] + soa.gp[g]).argmin())])
+        lim = soa.group_lim[pod]
+        head = lim - soa.ga[g]
+        free = head > 0.0
+        if free.any():
+            return int(g[int(np.where(free, -head / lim,
+                                      np.inf).argmin())])
+        return int(g[int((soa.gp[g] / lim).argmin())])
+
 
 def _worth_following(home: ReplicaView, views: Sequence[ReplicaView],
                      min_headroom_frac: float, spill_slack: float) -> bool:
@@ -343,6 +388,37 @@ class AffinityRouter(GCRAwareRouter):
         self._home[sid] = i
         return i
 
+    def _follow_soa(self, home_idx: int, soa,
+                    views: Sequence[ReplicaView]) -> bool:
+        if self.cache_slack:
+            # cache-aware slack reads the published prefix gauges; keep
+            # the scalar path (one view, not a scan - nothing to gain)
+            home = self._view_by_idx(views, home_idx)
+            return home is not None and self._follow(home, views)
+        lim_h = soa.glim[home_idx]
+        if np.isnan(lim_h):
+            return True          # unlimited replica: no congestion signal
+        if lim_h - soa.ga[home_idx] > self.min_headroom_frac * lim_h:
+            return True          # room at home
+        live = soa.live
+        lims = soa.glim[live]
+        ok = ~np.isnan(lims) & (lims != 0.0)   # the scalar scan's `if limit:`
+        best = float(np.min(soa.gp[live][ok] / lims[ok])) \
+            if ok.any() else 0.0
+        return (soa.gp[home_idx] / lim_h) - best <= self.spill_slack
+
+    def route_soa(self, req, soa, views: Sequence[ReplicaView]) -> int:
+        sid = req.session_id
+        if sid < 0:
+            return super().route_soa(req, soa, views)
+        home_idx = self._home.get(sid)
+        if home_idx is not None and soa.alive[home_idx] \
+                and self._follow_soa(home_idx, soa, views):
+            return home_idx
+        i = super().route_soa(req, soa, views)
+        self._home[sid] = i
+        return i
+
 
 class PrefixAwareRouter(GCRAwareRouter):
     """Score candidates by estimated warm prefix tokens x headroom.
@@ -362,6 +438,10 @@ class PrefixAwareRouter(GCRAwareRouter):
     """
 
     name = "prefix_aware"
+    # placement-history scoring walks a dict per prefix - no array form;
+    # shadow the inherited vectorized route so the fast loop falls back
+    # to the scalar scan (still correct: views read the same gauges)
+    route_soa = None
 
     def __init__(self, n_pods: int = 2, min_headroom_frac: float = 0.0,
                  spill_slack: float = 0.25,

@@ -178,22 +178,14 @@ class ClusterTelemetry:
         # series is ever sorted twice and all percentiles - full, warm,
         # cold - derive from the same sorted array via the shared
         # nearest-rank rule.
-        ttft_l: List[float] = []
-        per_tok_l: List[float] = []
-        had_l: List[bool] = []
-        warm_l: List[bool] = []
-        gen_l: List[int] = []
-        pod_l: List[int] = []
-        for r in completed:
-            if r.first_token_ms < 0:
-                continue
-            ttft_l.append(r.first_token_ms - r.arrive_ms)
-            per_tok_l.append((r.done_ms - r.first_token_ms)
-                             / max(1, r.gen_len - 1))
-            had_l.append(r.prefix_len > 0)
-            warm_l.append(r.prefix_hit_tokens > 0)
-            gen_l.append(r.gen_len)
-            pod_l.append(r.pod)
+        fin = [r for r in completed if r.first_token_ms >= 0]
+        ttft_l = [r.first_token_ms - r.arrive_ms for r in fin]
+        per_tok_l = [(r.done_ms - r.first_token_ms)
+                     / max(1, r.gen_len - 1) for r in fin]
+        had_l = [r.prefix_len > 0 for r in fin]
+        warm_l = [r.prefix_hit_tokens > 0 for r in fin]
+        gen_l = [r.gen_len for r in fin]
+        pod_l = [r.pod for r in fin]
         ttft_arr = np.asarray(ttft_l, dtype=np.float64)
         per_tok_arr = np.asarray(per_tok_l, dtype=np.float64)
         order = np.argsort(ttft_arr, kind="stable")

@@ -74,6 +74,7 @@ CONTRACT: Contract = {
                 "active_limits": "None",
                 "costs": "None",
                 "prefix_cache_tokens": "0",
+                "leap_stepping": "True",
             },
         },
         "run_fleet": {
@@ -98,6 +99,7 @@ CONTRACT: Contract = {
                 "faults": "None",
                 "health": "None",
                 "hedge": "None",
+                "soa_fast_path": "True",
             },
         },
         "knee_cost": {
@@ -129,6 +131,7 @@ CONTRACT: Contract = {
                 "cost": "None",
                 "avg_prompt": "512",
                 "prefix_cache": "None",
+                "leap_stepping": "True",
             },
         },
         "PrefixCache": {
@@ -427,6 +430,71 @@ CONTRACT: Contract = {
                 "duration_ms": REQUIRED,
                 "spec": "DEFAULT_SPEC",
                 "seed": "0",
+            },
+        },
+    },
+    # shard-mode fork/join surfaces: the striping, manifest format, and
+    # join semantics are part of the bit-identity contract (a sharded
+    # run must reassemble to the exact sequential result list)
+    "benchmarks/scale_bench.py": {
+        "run_grid": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "points": REQUIRED,
+                "jobs": "None",
+                "hosts": "None",
+                "shard_dir": "None",
+            },
+        },
+        "write_shards": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "points": REQUIRED,
+                "n_shards": REQUIRED,
+                "shard_dir": REQUIRED,
+            },
+        },
+        "run_shard": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "shard_dir": REQUIRED,
+                "shard_idx": REQUIRED,
+                "jobs": "None",
+            },
+        },
+        "join_shards": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "shard_dir": REQUIRED,
+                "timeout_s": "0.0",
+                "poll_s": "0.5",
+            },
+        },
+        "shard_commands": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "shard_dir": REQUIRED,
+                "n_shards": REQUIRED,
+                "hosts": REQUIRED,
+                "jobs": "None",
+            },
+        },
+        "scale_sweep": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "smoke": "False",
+                "jobs": "None",
+                "hosts": "None",
+                "shard_dir": "None",
+            },
+        },
+        "mega_sweep": {
+            "pinned_by": "tests/test_leap.py",
+            "params": {
+                "smoke": "False",
+                "jobs": "None",
+                "hosts": "None",
+                "shard_dir": "None",
             },
         },
     },

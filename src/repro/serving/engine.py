@@ -35,6 +35,12 @@ import numpy as np
 from ..core.admission import GCRAdmission, NoAdmission
 from ..core.pod_aware import GCRPod
 
+# Admissions whose tick() is exactly ``step += 1`` and which promote only
+# inside release(): the whole leap-chain contract (``adm.step += k`` banks k
+# ticks with no other side effect) is proven against these three concrete
+# classes, so subclasses and foreign admissions fall back to per-step mode.
+_LEAP_ADMISSIONS = (GCRAdmission, GCRPod, NoAdmission)
+
 
 def percentile(sorted_vals: Sequence[float], q: float) -> float:
     """Nearest-rank percentile over an ascending-sorted sequence: the
@@ -241,11 +247,13 @@ class SimServeEngine:
                  "_resident", "_nsteps", "_join_seq", "_pod_count",
                  "_pending_prefill", "_finish_heap", "_is_pod_adm",
                  "_has_cancel", "_reports_demoted", "peak_active",
-                 "peak_parked", "obs")
+                 "peak_parked", "obs", "leap_stepping", "_leap",
+                 "_leap_ok")
 
     def __init__(self, admission, cost: Optional[StepCostModel] = None,
                  avg_prompt: int = 512,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 leap_stepping: bool = True):
         self.admission = admission
         self.cost = cost or StepCostModel()
         self.avg_prompt = avg_prompt
@@ -258,6 +266,19 @@ class SimServeEngine:
         # Observability bundle; None is the zero-overhead default - the
         # three step() hook sites guard on it and emit nothing
         self.obs = None
+        # steady-state leap stepping (DESIGN.md 3): when the active set is
+        # unchanged between events and resident KV sits below the HBM
+        # knee, step_ms is constant, so step_leap() banks N identical
+        # steps in one call.  The leaped clock is produced by the same
+        # chained float additions the per-step loop would execute, so
+        # traces stay bit-identical; False forces per-step iteration
+        self.leap_stepping = leap_stepping
+        # gate terms that never change after construction, folded to one
+        # flag off the per-boundary path (obs stays a dynamic check: the
+        # observability bundle installs engine hooks per run)
+        self._leap_ok = (leap_stepping
+                         and type(self) is SimServeEngine
+                         and type(admission) in _LEAP_ADMISSIONS)
         self._reset_accounting()
 
     # -- incremental accounting ----------------------------------------------
@@ -268,6 +289,10 @@ class SimServeEngine:
         self._pod_count: Dict[int, int] = {}
         self._pending_prefill: Dict[int, Request] = {}
         self._finish_heap: List[tuple] = []
+        # active leap chain metadata: (first_boundary, chain_dt, n_chained,
+        # n_active) while a banked chain is in flight, else None (the fleet
+        # truncates against this when an arrival lands mid-chain)
+        self._leap = None
         self._is_pod_adm = isinstance(self.admission, GCRPod)
         self._has_cancel = hasattr(self.admission, "cancel")
         self._reports_demoted = hasattr(self.admission, "last_demoted")
@@ -408,6 +433,7 @@ class SimServeEngine:
         for rid in list(self.active):
             self._deactivate(rid)
         self._finish_heap.clear()
+        self._leap = None
         self.admission.drain()
         return active_moved, parked_moved
 
@@ -525,6 +551,8 @@ class SimServeEngine:
         # stale entries (demoted/re-joined streams), and restore active-set
         # insertion order via the join sequence numbers
         finish_heap = self._finish_heap
+        if not finish_heap or finish_heap[0][0] > cur:
+            return dt, []
         requests = self.requests
         finished: List[tuple] = []
         while finish_heap and finish_heap[0][0] <= cur:
@@ -592,6 +620,172 @@ class SimServeEngine:
             self.peak_parked = p
         return dt, done
 
+    # -- steady-state leap stepping (DESIGN.md 3) ---------------------------
+    def step_leap(self, now: float, bank_lt: float = math.inf,
+                  bank_le: float = math.inf,
+                  end_le: float = math.inf) -> tuple:
+        """One decode step, then bank as many *identical* follow-up steps
+        as provably nothing can observe.  Returns ``(end_ms, finished,
+        n_steps)``: ``end_ms`` is the boundary the next step event belongs
+        at and ``n_steps`` counts decode steps banked (>= 1; the caller's
+        event accounting owes ``n_steps - 1`` extra events).
+
+        A follow-up step is identical to its predecessor when the active
+        set is unchanged (no completion due, no arrival or admin event
+        yet) and resident KV stays at or below the HBM-thrash knee: every
+        term of the step cost is then a function of unchanged state, so
+        ``dt`` is literally the same float.  The chain clock is produced
+        by the same repeated ``b += dt`` additions the per-step loop
+        would execute - never ``t0 + k*dt``, whose single rounding differs
+        from k chained roundings - so leaped boundaries are bit-identical
+        to per-step iteration.
+
+        Bounds: a step *starting* at boundary ``b`` is banked only while
+        ``b < bank_lt`` (strict: an arrival at ``b`` wins the time tie
+        and must observe pre-step counters) and ``b <= bank_le`` (the
+        fleet still processes events landing exactly at ``max_ms``); a
+        step *ending* at ``e`` is banked only while ``e <= end_le`` (the
+        caller's admin-event horizon; end-equality is safe because the
+        admin event was pushed earlier, holds the smaller heap sequence,
+        and therefore pops before the boundary's step event in the
+        per-step world too - after every chained step is already banked).
+        """
+        dt, done = self.step(now)
+        self._leap = None
+        end = now + dt
+        if dt <= 0.0 or done or not self._leap_ok or self.obs is not None:
+            return end, done, 1
+        # completion bound: the earliest finish-calendar entry fires on the
+        # step that reaches its finish step, so at most k further steps are
+        # completion-free; stale entries (demoted streams) only stop the
+        # chain early, never late
+        fh = self._finish_heap
+        if not fh:
+            return end, done, 1
+        k = fh[0][0] - self._nsteps - 1
+        if k <= 0:
+            return end, done, 1
+        active = self.active
+        n = len(active)
+        cost = self.cost
+        adm = self.admission
+        # chain step cost, term-for-term the floats step() would produce:
+        # no prefill (pending cleared by the step above), no thrash (knee
+        # bound below), pod mix frozen with the membership
+        if self._is_pod_adm:
+            pod_mix = adm.active_pod_mix()
+        elif len(self._pod_count) == 1:
+            pod_mix = 0.0
+        else:
+            pod_mix = 1.0 - max(self._pod_count.values()) / n
+        dtc = cost.t_fixed_ms + cost.t_tok_ms * n
+        dtc += cost.t_xpod_ms * pod_mix
+        # HBM knee: banked step m enters with resident R + (m-1)*n tokens
+        # (integer-exact), and step() charges thrash strictly above load
+        # 1.0, so the chain must satisfy (R + (c-1)*n)*kvb/hbm <= 1.0 -
+        # monotone in c, so the largest admissible c binary-searches
+        R = self._resident
+        kvb = cost.kv_bytes_per_tok
+        hb = cost.hbm_budget
+        if R * kvb / hb > 1.0:
+            return end, done, 1
+        if (R + (k - 1) * n) * kvb / hb > 1.0:
+            lo, hi = 1, k               # knee holds at lo, fails at hi
+            while hi - lo > 1:
+                mid = (lo + hi) // 2
+                if (R + (mid - 1) * n) * kvb / hb > 1.0:
+                    hi = mid
+                else:
+                    lo = mid
+            k = lo
+        b = end
+        cnt = 0
+        while cnt < k and b < bank_lt and b <= bank_le:
+            e2 = b + dtc
+            if e2 > end_le:
+                break
+            b = e2
+            cnt += 1
+        if cnt == 0:
+            return end, done, 1
+        # bank the chain: every counter a later observer reads moves by
+        # exactly what cnt per-step calls would have applied (tick() is
+        # step += 1 for every admission the gate above admits; membership,
+        # peaks, prefill and completions are all provably untouched)
+        self._nsteps += cnt
+        adm.step += cnt
+        self.tokens_out += cnt * n
+        self._resident += cnt * n
+        self._leap = (end, dtc, cnt, n)
+        return b, done, 1 + cnt
+
+    def leap_truncate(self, ta: float) -> tuple:
+        """Roll back the banked steps of the in-flight leap chain that a
+        per-step loop would not yet have executed at time ``ta`` (an
+        arrival or migrate submit landing mid-chain).  A chained step is
+        kept iff its bank point - the boundary whose step event the
+        per-step loop would have popped - is strictly before ``ta``
+        (arrivals win time ties, so a step banked exactly at ``ta`` has
+        not happened yet).  Returns ``(boundary_ms, n_rolled_back)``
+        where ``boundary_ms`` is where the replica's next step event now
+        belongs; ``(inf, 0)`` if no chain is in flight.  The rollback is
+        integer-exact: chained steps changed nothing but the four
+        counters re-adjusted here."""
+        leap = self._leap
+        if leap is None:
+            return math.inf, 0
+        e, dtc, cnt, n = leap
+        j = 0
+        while j < cnt and e < ta:
+            e += dtc
+            j += 1
+        u = cnt - j
+        if u:
+            self._nsteps -= u
+            self.admission.step -= u
+            self.tokens_out -= u * n
+            self._resident -= u * n
+        self._leap = None
+        return e, u
+
+    def leap_submit(self, r: Request, ta: float) -> tuple:
+        """Submit an arrival landing mid-chain, keeping the chain alive
+        when the request merely parks.
+
+        The submit must see exactly the counters a per-step loop would
+        hold at ``ta``, so the not-yet-due banked tail (same strict-<
+        walk as ``leap_truncate``) is rewound first.  If the admission
+        parks the request the active set - and with it every future
+        boundary and every banked effect - is untouched, so the tail is
+        re-banked and the chain survives; only an *activation* (membership
+        change => the next step's cost changes) truncates for real.
+
+        Returns ``(boundary_ms, n_rolled_back, admitted)``: rolled-back
+        > 0 means the caller owes the same event/sequence refunds as
+        after ``leap_truncate``; 0 with ``admitted=False`` means the
+        chain (and the caller's pending boundary) is intact."""
+        e, dtc, cnt, n = self._leap
+        j = 0
+        while j < cnt and e < ta:
+            e += dtc
+            j += 1
+        u = cnt - j
+        adm = self.admission
+        if u:
+            self._nsteps -= u
+            adm.step -= u
+            self.tokens_out -= u * n
+            self._resident -= u * n
+        if not self.submit(r):
+            if u:                       # parked: re-bank the tail
+                self._nsteps += u
+                adm.step += u
+                self.tokens_out += u * n
+                self._resident += u * n
+            return e, 0, False
+        self._leap = None
+        return e, u, True
+
     # -- self-clocked driver -------------------------------------------------
     def run(self, requests: List[Request], max_ms: float = 60_000.0
             ) -> ServeResult:
@@ -604,22 +798,34 @@ class SimServeEngine:
         now = 0.0
         pending = sorted(requests, key=lambda r: (r.arrive_ms, r.rid))
         pi = 0
+        n_pending = len(pending)
+        # self-clocked leaping: between arrivals nothing external can
+        # observe the engine, so a chain may bank straight to the next
+        # arrival (strict: the loop admits arrive_ms <= now before
+        # stepping, so a step starting at the arrival's time runs with
+        # changed membership) or to max_ms (strict: the while condition)
+        leap = self._leap_ok and self.obs is None
 
         while now < max_ms:
             # arrivals
-            while pi < len(pending) and pending[pi].arrive_ms <= now:
+            while pi < n_pending and pending[pi].arrive_ms <= now:
                 self.submit(pending[pi])
                 pi += 1
-            if not self.active and pi >= len(pending) and not adm.num_parked:
+            if not self.active and pi >= n_pending and not adm.num_parked:
                 break
             if not self.active:
                 # idle until next arrival
-                if pi < len(pending):
+                if pi < n_pending:
                     now = max(now, pending[pi].arrive_ms)
                     continue
                 break
-            dt, _ = self.step(now)
-            now += dt
+            if leap:
+                nxt = pending[pi].arrive_ms if pi < n_pending else math.inf
+                now, _, _ = self.step_leap(
+                    now, bank_lt=nxt if nxt < max_ms else max_ms)
+            else:
+                dt, _ = self.step(now)
+                now += dt
 
         return self._result(now)
 

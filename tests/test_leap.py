@@ -1,0 +1,337 @@
+"""Leap-stepping + SoA fast-path equivalence suite (PR 9).
+
+Pins the two perf paths added for steady-state sweeps:
+
+* ``SimServeEngine`` leap stepping (``step_leap``/``leap_truncate``/
+  ``leap_submit``): banked follow-up steps must be bit-identical to
+  per-step iteration, including chains that land exactly on a publish
+  tick, a scale tick, or a fault-window edge (the event wins the time
+  tie), and chains truncated by the HBM-thrash knee mid-leap.
+* The struct-of-arrays fleet event loop (``run_fleet`` with
+  ``soa_fast_path``): digests must be identical fast-on vs fast-off.
+
+This file is also the ``pinned_by`` anchor for the shard-mode knobs the
+R3 contract table registers on ``benchmarks/scale_bench.py``, and it
+round-trips the fork/join shard protocol against sequential
+``run_grid``.
+"""
+
+import dataclasses
+import hashlib
+import inspect
+import math
+import pathlib
+import random
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.cluster import (FleetConfig, WorkloadSpec, poisson, run_fleet,
+                           sessions)
+from repro.cluster.faults import FaultSchedule, Limplock
+from repro.serving.engine import (PrefixCache, Request, SimServeEngine,
+                                  StepCostModel, make_admission)
+
+from benchmarks import scale_bench
+
+SPEC = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128), n_pods=2)
+
+# dt == t_fixed_ms exactly, for every batch size: chained boundaries land
+# on the 4ms grid, so publish/scale ticks at multiples of 4ms produce
+# *exact* float time ties with leap-chain step events
+EXACT_COST = StepCostModel(t_fixed_ms=4.0, t_tok_ms=0.0,
+                           kv_bytes_per_tok=1.0, hbm_budget=1e18,
+                           thrash_coef=40.0, t_xpod_ms=0.0)
+
+
+def _digest(res) -> str:
+    return hashlib.sha256(repr(res).encode()).hexdigest()
+
+
+def _grid_reqs(n_initial=6, gen_len=40, late=((10.0, 2), (12.0, 2))):
+    """Arrivals at t=0 plus late arrivals mid-chain (10.0 is strictly
+    inside a banked step, 12.0 is exactly on a chain boundary)."""
+    reqs = [Request(rid=i, prompt_len=64, gen_len=gen_len, pod=i % 2,
+                    arrive_ms=0.0) for i in range(n_initial)]
+    rid = n_initial
+    for t, k in late:
+        for _ in range(k):
+            reqs.append(Request(rid=rid, prompt_len=64, gen_len=gen_len,
+                                pod=rid % 2, arrive_ms=t))
+            rid += 1
+    return reqs
+
+
+def _run_variants(reqs, cfg_kw, run_kw):
+    """The 4-way A/B: (leap on/off) x (SoA fast path on/off)."""
+    out = []
+    for leap in (True, False):
+        for soa in (True, False):
+            cfg = FleetConfig(cost=EXACT_COST, leap_stepping=leap,
+                              **cfg_kw)
+            res = run_fleet([r.fresh() for r in reqs], "gcr_aware",
+                            cfg, soa_fast_path=soa, **run_kw)
+            out.append((leap, soa, res))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3 contract anchors: the defaults the lint table pins live here
+# ---------------------------------------------------------------------------
+
+
+def test_shard_and_leap_defaults_pinned():
+    def defaults(fn):
+        return {k: v.default for k, v in
+                inspect.signature(fn).parameters.items()
+                if v.default is not inspect.Parameter.empty}
+
+    assert defaults(scale_bench.run_grid) == {
+        "jobs": None, "hosts": None, "shard_dir": None}
+    assert defaults(scale_bench.write_shards) == {}
+    assert defaults(scale_bench.run_shard) == {"jobs": None}
+    assert defaults(scale_bench.join_shards) == {
+        "timeout_s": 0.0, "poll_s": 0.5}
+    assert defaults(scale_bench.shard_commands) == {"jobs": None}
+    sweep = {"smoke": False, "jobs": None, "hosts": None,
+             "shard_dir": None}
+    assert defaults(scale_bench.scale_sweep) == sweep
+    assert defaults(scale_bench.mega_sweep) == sweep
+    # the perf paths themselves default ON (goldens pin their output)
+    assert FleetConfig().leap_stepping is True
+    assert (inspect.signature(run_fleet).parameters["soa_fast_path"]
+            .default is True)
+    assert (inspect.signature(SimServeEngine).parameters["leap_stepping"]
+            .default is True)
+
+
+# ---------------------------------------------------------------------------
+# exact time-tie scenarios: event wins, leaped or not
+# ---------------------------------------------------------------------------
+
+
+def test_leap_chain_lands_exactly_on_publish_tick():
+    """staleness 8ms on a 4ms step grid: every second chain boundary
+    *is* a publish instant.  The publish event holds the older heap
+    sequence so it must pop first - in all four path combinations."""
+    reqs = _grid_reqs()
+    runs = _run_variants(
+        reqs, dict(n_replicas=4, admission="gcr", active_limit=2,
+                   n_pods=2),
+        dict(max_ms=4_000.0, staleness_ms=8.0))
+    digests = {_digest(res) for _, _, res in runs}
+    assert len(digests) == 1, \
+        [(leap, soa, _digest(res)[:12]) for leap, soa, res in runs]
+    assert runs[0][2].completed == runs[0][2].offered
+
+
+def test_leap_chain_lands_exactly_on_scale_tick():
+    """Queue-depth autoscale ticks every 500ms == 125 exact 4ms steps;
+    the scale event must observe per-step-identical queue depths."""
+    reqs = _grid_reqs(n_initial=10, gen_len=60)
+    runs = _run_variants(
+        reqs, dict(n_replicas=2, admission="gcr", active_limit=2,
+                   n_pods=2),
+        dict(max_ms=6_000.0, autoscale=True, max_replicas=4))
+    digests = {_digest(res) for _, _, res in runs}
+    assert len(digests) == 1
+    assert runs[0][2].completed == runs[0][2].offered
+
+
+def test_leap_with_fault_window_on_step_grid():
+    """A limplock window opening/closing exactly on chain boundaries.
+    Faults force the event-calendar path (SoA gate), so this pins leap
+    on/off equality through the slow loop's fault branches."""
+    reqs = _grid_reqs(n_initial=8, gen_len=50)
+    faults = FaultSchedule(limplocks=[Limplock(0, 8.0, 24.0, factor=4.0)])
+    out = []
+    for leap in (True, False):
+        cfg = FleetConfig(n_replicas=4, admission="gcr", active_limit=2,
+                          n_pods=2, cost=EXACT_COST, leap_stepping=leap)
+        res = run_fleet([r.fresh() for r in reqs], "gcr_aware", cfg,
+                        max_ms=5_000.0, staleness_ms=8.0, faults=faults)
+        out.append(res)
+    assert _digest(out[0]) == _digest(out[1])
+    assert out[0].completed == out[0].offered
+
+
+# ---------------------------------------------------------------------------
+# knee crossing mid-leap: the chain must stop exactly at the thrash edge
+# ---------------------------------------------------------------------------
+
+
+def test_knee_crossing_mid_leap_truncates_chain():
+    """Resident KV grows one token per stream per step and crosses the
+    HBM knee mid-run; banked chains must stop at the last pre-knee step
+    (thrash changes dt, so a chained step past the knee would diverge)."""
+    cost = StepCostModel(t_fixed_ms=1.0, t_tok_ms=0.5,
+                         kv_bytes_per_tok=1.0, hbm_budget=1000.0,
+                         thrash_coef=7.0, t_xpod_ms=0.0)
+    reqs = [Request(rid=i, prompt_len=64, gen_len=200, pod=0,
+                    arrive_ms=0.0) for i in range(8)]
+    # initial resident 8*64=512 < 1000 < final 512+8*200: crosses mid-run
+    traces = []
+    for leap in (True, False):
+        eng = SimServeEngine(make_admission("gcr", 16), cost=cost,
+                             leap_stepping=leap)
+        res = eng.run([r.fresh() for r in reqs], max_ms=600_000.0)
+        traces.append((res.sim_ms.hex(), sorted(
+            (r.rid, r.generated, r.first_token_ms.hex(), r.done_ms.hex())
+            for r in eng.requests.values())))
+        assert len(eng.completed) == len(reqs)
+    assert traces[0] == traces[1]
+
+
+def test_step_leap_bank_and_truncate_counters_exact():
+    """Unit-level contract: one step_leap call banks >1 step between
+    events, and leap_truncate rolls back exactly the banked tail a
+    per-step loop would not yet have executed at ``ta`` (strict <:
+    arrivals win time ties)."""
+    def mk():
+        eng = SimServeEngine(make_admission("gcr", 8), cost=EXACT_COST)
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt_len=64, gen_len=50, pod=0,
+                               arrive_ms=0.0))
+        return eng
+
+    a, b = mk(), mk()
+    end, done, n = a.step_leap(0.0)
+    assert n > 1 and not done
+    assert end == pytest.approx(4.0 * n) and end == 4.0 * n
+    # roll back to what a per-step loop holds at ta=10.0 (strictly
+    # inside the third step): steps banked at 4.0 and 8.0 stay, the rest
+    # unwind
+    boundary, rolled = a.leap_truncate(10.0)
+    steps_kept = n - rolled
+    for _ in range(steps_kept):
+        dt, _ = b.step(0.0)  # clock irrelevant to counters
+    assert boundary == 4.0 * steps_kept
+    assert a._nsteps == b._nsteps
+    assert a.tokens_out == b.tokens_out
+    assert a._resident == b._resident
+    assert a.admission.step == b.admission.step
+    # a second truncate is a no-op: the chain is consumed
+    assert a.leap_truncate(10.0) == (math.inf, 0)
+    # ta exactly on a banked boundary: that step has NOT happened yet
+    c = mk()
+    _, _, n2 = c.step_leap(0.0)
+    boundary2, rolled2 = c.leap_truncate(8.0)
+    assert boundary2 == 8.0 and rolled2 == n2 - 2
+
+
+# ---------------------------------------------------------------------------
+# fuzz: random workloads, leap on == leap off (and SoA on == off)
+# ---------------------------------------------------------------------------
+
+
+def _engine_trace(reqs, leap, seed_cache=False):
+    cost = dataclasses.replace(
+        StepCostModel(), t_prefill_ms_per_tok=0.05)
+    eng = SimServeEngine(make_admission("gcr", 12, promote_every=16),
+                         cost=cost,
+                         prefix_cache=PrefixCache(40_000)
+                         if seed_cache else None,
+                         leap_stepping=leap)
+    res = eng.run([r.fresh() for r in reqs], max_ms=120_000.0)
+    rows = sorted((r.rid, r.generated, r.prefix_hit_tokens,
+                   r.first_token_ms.hex(), r.done_ms.hex())
+                  for r in eng.requests.values())
+    return res.sim_ms.hex(), eng.tokens_out, rows
+
+
+def test_leap_fuzz_seeded_random_workloads():
+    rng = random.Random(99)
+    for trial in range(8):
+        seed = rng.randrange(10_000)
+        rps = rng.uniform(5.0, 120.0)
+        if trial % 2:
+            reqs = sessions(rps, 900.0, SPEC, seed=seed, think_ms=300.0)
+        else:
+            reqs = poisson(rps, 900.0, SPEC, seed=seed)
+        on = _engine_trace(reqs, True, seed_cache=bool(trial % 2))
+        off = _engine_trace(reqs, False, seed_cache=bool(trial % 2))
+        assert on == off, f"divergence at seed={seed} rps={rps}"
+
+
+def test_leap_fuzz_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(0, 2**16), rps=st.floats(2.0, 150.0))
+    @hyp.settings(max_examples=20, deadline=None)
+    def run(seed, rps):
+        reqs = poisson(rps, 700.0, SPEC, seed=seed)
+        assert _engine_trace(reqs, True) == _engine_trace(reqs, False)
+
+    run()
+
+
+def test_fleet_ab_sessions_digest_fast_on_off():
+    """The golden-style session scenario through all four path combos:
+    one digest.  (cluster_bench --smoke asserts the same A/B in CI.)"""
+    reqs = sessions(60.0, 1_000.0, SPEC, seed=5, think_ms=400.0)
+    out = []
+    for leap in (True, False):
+        for soa in (True, False):
+            cfg = FleetConfig(n_replicas=4, admission="gcr",
+                              active_limit=16, n_pods=2,
+                              prefix_cache_tokens=40_000,
+                              leap_stepping=leap)
+            res = run_fleet([r.fresh() for r in reqs], "gcr_aware", cfg,
+                            max_ms=60_000.0, soa_fast_path=soa)
+            out.append(res)
+    assert len({_digest(r) for r in out}) == 1
+    assert out[0].completed == out[0].offered
+
+
+# ---------------------------------------------------------------------------
+# shard-mode fork/join protocol
+# ---------------------------------------------------------------------------
+
+
+def _tiny_points(n=5):
+    return [scale_bench.GridPoint(
+        tag=f"t{i}", workload="poisson", rps=20.0 + 5.0 * i,
+        duration_ms=250.0, seed=3 + i, router="gcr_aware",
+        n_replicas=2, active_limit=8, prompt_range=(64, 128),
+        gen_range=(16, 32), max_ms=30_000.0, router_seed=1)
+        for i in range(n)]
+
+
+def test_shard_roundtrip_matches_sequential(tmp_path):
+    """write_shards -> run_shard (in-process) -> join_shards must
+    reassemble the exact sequential run_grid result list, in submission
+    order, through the round-robin striping."""
+    pts = _tiny_points()
+    seq = scale_bench.run_grid(pts, jobs=1)
+    d = str(tmp_path)
+    manifest = scale_bench.write_shards(pts, 2, d)
+    assert pathlib.Path(manifest).name == "manifest.json"
+    for si in range(2):
+        scale_bench.run_shard(d, si, jobs=1)
+    joined = scale_bench.join_shards(d)
+    assert [repr(r) for r in joined] == [repr(r) for r in seq]
+
+
+def test_join_shards_incomplete_raises(tmp_path):
+    pts = _tiny_points(3)
+    d = str(tmp_path)
+    scale_bench.write_shards(pts, 2, d)
+    scale_bench.run_shard(d, 0, jobs=1)   # shard 1 never reports
+    with pytest.raises(RuntimeError, match="missing shard"):
+        scale_bench.join_shards(d, timeout_s=0.0)
+
+
+def test_shard_commands_local_and_ssh(tmp_path):
+    d = str(tmp_path)
+    cmds = scale_bench.shard_commands(d, 3, ["local", "hostA"])
+    # shard i -> host i % len(hosts)
+    assert cmds[0][0] == sys.executable and "--run-shard" in cmds[0]
+    assert cmds[0][cmds[0].index("--run-shard") + 1] == "0"
+    assert cmds[1][0] == "ssh" and cmds[1][1] == "hostA"
+    assert "--run-shard 1" in cmds[1][2]
+    assert "benchmarks/scale_bench.py" in cmds[1][2]
+    assert cmds[2][0] == sys.executable
+    assert cmds[2][cmds[2].index("--run-shard") + 1] == "2"
