@@ -276,6 +276,37 @@ def collapse_onset(smoke: bool = False, jobs: Optional[int] = None,
                 (f"{tag}: spurious collapse onset in window "
                  f"{onset['window']} at {onset['t_ms']:.0f}ms")
 
+    if not smoke:
+        # --- fleet-scale negative control (full mode only) -------------
+        # 1000 replicas just under capacity with the windowed view on:
+        # the onset detector must stay silent over the whole series.
+        # This is the windows-only fast-path regime (live signals, no
+        # spans), so it also anchors the suite's >= 2x wall-clock claim
+        # for the SoA loop vs --fast-path off at fleet scale.
+        fleet_spec = WorkloadSpec(prompt_range=(128, 512),
+                                  gen_range=(32, 128), n_pods=N_PODS)
+        (steady,) = run_grid([GridPoint(
+            tag="onset/steady_fleet", workload="poisson", rps=48_000.0,
+            duration_ms=1_500.0, seed=13, router="gcr_aware",
+            n_replicas=1000, active_limit=16, n_pods=N_PODS,
+            prompt_range=fleet_spec.prompt_range,
+            gen_range=fleet_spec.gen_range, max_ms=60_000.0,
+            router_seed=1, window_ms=ONSET_WINDOW_MS)], jobs)
+        assert_conserved(steady, "onset/steady_fleet")
+        assert sum(int(w["arrivals"]) for w in steady.windows) \
+            == steady.offered
+        assert sum(int(w["completed"]) for w in steady.windows) \
+            == steady.completed
+        fleet_onset = detect_collapse_onset(steady.windows)
+        assert fleet_onset is None, \
+            (f"steady_fleet: spurious collapse onset in window "
+             f"{fleet_onset['window']}")
+        rows.append(("cluster/onset/steady_fleet_window", -1.0, ""))
+        rows.append(("cluster/onset/steady_fleet_goodput_tok_s",
+                     steady.goodput_tok_s, ""))
+        if sink is not None:
+            sink.setdefault("windows", {})["steady_fleet"] = steady.windows
+
     # --- flight recorder reproduces the autoscaler's decisions ---------
     from repro.cluster import Observability
     limit2 = 32
@@ -719,8 +750,17 @@ def fault_resilience(smoke: bool = False,
       crash run by >= 10% goodput (the hedge twin lands on a healthy
       replica while the requeued original waits out the cold restart);
     * copy-space conservation holds on every faulted run.
+
+    Full mode (not --smoke) additionally runs the fleet-scale limplock
+    scenario on live signals: 1000 replicas just under capacity with a
+    quarter of the pool limping x16.  Live gauges stay honest (no
+    blackout), so ``gcr_aware`` routes around the sick quarter and
+    fleet goodput holds within 2% of the clean run - and because live
+    signals leave the admin-barrier calendar empty, leap chains stay
+    long under the faults, anchoring the suite's >= 2x wall-clock vs
+    ``--fast-path off``.  (The targeted 3-replica scenario above runs
+    in both modes; its claims are identical either way.)
     """
-    del smoke                     # same deterministic scenario both modes
     n_replicas, limit, duration_ms = 3, 32, 2_000.0
     spec = WorkloadSpec(prompt_range=(128, 512), gen_range=(32, 128),
                         n_pods=N_PODS)
@@ -779,6 +819,44 @@ def fault_resilience(smoke: bool = False,
     assert hedge_gain >= 1.10, \
         (f"hedged crash run should rescue >= 10% goodput vs unhedged: "
          f"got {hedge_gain:.3f}x")
+
+    if not smoke:
+        # --- fleet-scale limplock on live signals (full mode only) -----
+        # a quarter of a 1000-replica pool limps x16; live gauges stay
+        # honest so gcr_aware routes around the sick quarter and the
+        # fleet holds goodput.  Live signals also mean no publish
+        # admin barriers: leap chains span the faults, which is where
+        # the suite's >= 2x fast-path wall-clock claim is anchored.
+        fleet_spec = WorkloadSpec(prompt_range=(128, 512),
+                                  gen_range=(32, 128), n_pods=N_PODS)
+        limp_fleet = FaultSchedule(limplocks=[
+            Limplock(i, 100.0, 1_200.0, factor=16.0)
+            for i in range(250)])
+
+        def fleet_point(tag, **kw):
+            return GridPoint(tag=tag, workload="poisson", rps=48_000.0,
+                             duration_ms=1_500.0, seed=13,
+                             router="gcr_aware", n_replicas=1000,
+                             active_limit=16, n_pods=N_PODS,
+                             prompt_range=fleet_spec.prompt_range,
+                             gen_range=fleet_spec.gen_range,
+                             max_ms=60_000.0, router_seed=1, **kw)
+
+        fclean, flimp = run_grid([fleet_point("fleet_clean"),
+                                  fleet_point("fleet_limp",
+                                              faults=limp_fleet)], jobs)
+        assert_conserved(fclean, "faults/fleet_clean")
+        assert_conserved(flimp, "faults/fleet_limp")
+        fleet_frac = flimp.goodput_tok_s / fclean.goodput_tok_s
+        rows.append(("cluster/faults/fleet_clean_goodput_tok_s",
+                     fclean.goodput_tok_s, ""))
+        rows.append(("cluster/faults/fleet_limp_goodput_tok_s",
+                     flimp.goodput_tok_s, ""))
+        rows.append(("cluster/claims/limp_fleet_goodput_frac",
+                     fleet_frac, ""))
+        assert fleet_frac >= 0.98, \
+            (f"work-conserving routing on live signals should hold fleet "
+             f"goodput with 25% of the pool limping: got {fleet_frac:.3f}")
     return rows
 
 
@@ -807,15 +885,21 @@ def main() -> None:
                          "rows plus the collapse-onset window series "
                          "(obs.WINDOW_SCHEMA keys) and full per-cell "
                          "ClusterResult dumps")
-    ap.add_argument("--fast-path", choices=("on", "off"), default="on",
+    ap.add_argument("--fast-path", choices=("on", "off", "clean"),
+                    default="on",
                     help="'off' forces every run_fleet through the "
                          "per-step event-calendar path (leap stepping "
-                         "and the SoA loop disabled); CI diffs the full "
-                         "output of on vs off - the paths are "
-                         "contractually bit-identical")
+                         "and the SoA loop disabled); 'clean' keeps the "
+                         "fast path but restores the pre-PR-10 "
+                         "everything-quiet gate, so the faulted / "
+                         "windowed suites take the calendar path.  CI "
+                         "diffs the full output of all three - the "
+                         "paths are contractually bit-identical, "
+                         "including the fault_resilience and "
+                         "collapse_onset suites")
     args = ap.parse_args()
-    if args.fast_path == "off":
-        os.environ["REPRO_FAST_PATH"] = "off"
+    if args.fast_path != "on":
+        os.environ["REPRO_FAST_PATH"] = args.fast_path
     sink: dict = {}
     rows = (cluster_collapse(args.smoke, args.jobs)
             + collapse_onset(args.smoke, args.jobs, sink)

@@ -52,6 +52,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 __all__ = ["Limplock", "Crash", "Blackout", "FaultSchedule",
            "HedgePolicy", "HealthPolicy", "HealthEstimator"]
 
@@ -240,70 +242,122 @@ class HealthEstimator:
     ties off by replica index, so a fixed seed gives a fixed ejection
     trace.  Requires a periodic bus (``staleness_ms > 0``): the live
     bus has no publish events to hang observations on.
+
+    History lives in struct-of-arrays form (one float64/int64 slot per
+    replica index, nan = no sample yet) so ``evaluate`` is a handful of
+    vector ops instead of an O(N) Python scan per publish tick.  All
+    arithmetic stays IEEE double either way, so every rate, EWMA and
+    median is bit-identical to the former per-replica dict-of-floats
+    representation.
     """
 
-    __slots__ = ("policy", "ejected", "_last", "_ewma", "_n")
+    __slots__ = ("policy", "ejected", "_t", "_done", "_ewma", "_n")
 
     def __init__(self, policy: HealthPolicy) -> None:
         self.policy = policy
         self.ejected: frozenset = frozenset()
-        self._last: Dict[int, Tuple[float, int]] = {}   # idx -> (t, done)
-        self._ewma: Dict[int, float] = {}
-        self._n: Dict[int, int] = {}                    # rate samples seen
+        self._t = np.zeros(0)          # last publish time (nan = none)
+        self._done = np.zeros(0, dtype=np.int64)   # completed at last pub
+        self._ewma = np.zeros(0)       # EWMA completion rate (nan = none)
+        self._n = np.zeros(0, dtype=np.int64)      # rate samples seen
+
+    def _ensure(self, n: int) -> None:
+        cur = len(self._n)
+        if n <= cur:
+            return
+        pad = max(n - cur, cur, 8)
+        self._t = np.concatenate([self._t, np.full(pad, np.nan)])
+        self._done = np.concatenate(
+            [self._done, np.zeros(pad, dtype=np.int64)])
+        self._ewma = np.concatenate([self._ewma, np.full(pad, np.nan)])
+        self._n = np.concatenate([self._n, np.zeros(pad, dtype=np.int64)])
+
+    def rate_samples(self, idx: int) -> int:
+        """Rate samples folded for ``idx`` (0 if never seen / forgotten)."""
+        return int(self._n[idx]) if idx < len(self._n) else 0
+
+    def has_history(self, idx: int) -> bool:
+        """True when ``idx`` has any publish history on file."""
+        if idx >= len(self._n):
+            return False
+        # nan-sentinel check: x == x is False only for nan
+        return bool(self._t[idx] == self._t[idx]
+                    or self._ewma[idx] == self._ewma[idx])
 
     def observe(self, idx: int, report, t_ms: float) -> None:
         """Fold replica ``idx``'s fresh publish into its EWMA rate."""
-        prev = self._last.get(idx)
-        self._last[idx] = (t_ms, report.completed)
-        if prev is None:
+        self._ensure(idx + 1)
+        prev_t = self._t[idx]
+        prev_done = self._done[idx]
+        self._t[idx] = t_ms
+        self._done[idx] = report.completed
+        if prev_t != prev_t:            # nan: first publish seen
             return
-        dt = t_ms - prev[0]
+        dt = t_ms - prev_t
         if dt <= 0.0:
             return
-        rate = (report.completed - prev[1]) / dt * 1e3   # completions/s
+        rate = (report.completed - prev_done) / dt * 1e3   # completions/s
         a = self.policy.ewma_alpha
-        old = self._ewma.get(idx)
-        self._ewma[idx] = rate if old is None else a * rate + (1 - a) * old
-        self._n[idx] = self._n.get(idx, 0) + 1
+        old = self._ewma[idx]
+        self._ewma[idx] = (rate if old != old
+                           else a * rate + (1 - a) * old)
+        self._n[idx] += 1
 
     def forget(self, idx: int) -> None:
         """Drop replica ``idx``'s rate history (crash/restart boundary):
         the first post-restart sample would otherwise span the downtime
         gap and eject the cold rejoiner on sight."""
-        self._last.pop(idx, None)
-        self._ewma.pop(idx, None)
-        self._n.pop(idx, None)
+        if idx < len(self._n):
+            self._t[idx] = np.nan
+            self._done[idx] = 0
+            self._ewma[idx] = np.nan
+            self._n[idx] = 0
 
     def evaluate(self, t_ms: float, reports: Sequence,
-                 live: Sequence[int]) -> Tuple[Tuple[int, ...],
-                                               Tuple[int, ...]]:
+                 live: Sequence[int],
+                 report_t=None) -> Tuple[Tuple[int, ...],
+                                         Tuple[int, ...]]:
         """Recompute the ejected set; returns ``(ejected, restored)``
-        deltas relative to the previous evaluation."""
+        deltas relative to the previous evaluation.
+
+        ``report_t`` may carry ``SignalBus.report_t`` (the numpy mirror
+        of ``reports[i].t_ms``) so the staleness mask is one gather;
+        omitted, the times are collected from ``reports`` - identical
+        values by the bus mirror invariant."""
         p = self.policy
-        stale: List[int] = []
-        judged: List[int] = []
-        if p.stale_ms > 0.0:
-            stale = [i for i in live
-                     if t_ms - reports[i].t_ms > p.stale_ms]
-        stale_set = frozenset(stale)
-        judged = [i for i in live
-                  if i not in stale_set and self._n.get(i, 0)
-                  >= p.min_reports]
-        slow: List[int] = []
-        if len(judged) >= 2:
-            rates = sorted(self._ewma[i] for i in judged)
-            mid = len(rates) // 2
-            median = (rates[mid] if len(rates) % 2
-                      else 0.5 * (rates[mid - 1] + rates[mid]))
+        nlive = len(live)
+        live_a = np.asarray(live, dtype=np.intp)
+        if nlive:
+            self._ensure(int(live_a.max()) + 1)
+        if report_t is None:
+            rt = np.array([reports[i].t_ms for i in live],
+                          dtype=np.float64)
+        else:
+            rt = np.asarray(report_t, dtype=np.float64)[live_a]
+        if p.stale_ms > 0.0 and nlive:
+            stale_m = (t_ms - rt) > p.stale_ms
+        else:
+            stale_m = np.zeros(nlive, dtype=bool)
+        judged = live_a[~stale_m & (self._n[live_a] >= p.min_reports)]
+        slow = judged[:0]
+        if judged.size >= 2:
+            r = np.sort(self._ewma[judged])
+            mid = r.size // 2
+            # exact legacy median spelling (mid element / 0.5*(a+b)), not
+            # np.median, whose averaging could round differently
+            median = (r[mid] if r.size % 2
+                      else 0.5 * (r[mid - 1] + r[mid]))
             if median > 0.0:
                 floor = p.rate_frac * median
-                slow = [i for i in judged if self._ewma[i] < floor]
+                slow = judged[self._ewma[judged] < floor]
         # rank the accused: stalest report first, then slowest EWMA,
         # index breaking every tie; cap so someone always serves
-        stale.sort(key=lambda i: (reports[i].t_ms, i))
-        slow.sort(key=lambda i: (self._ewma[i], i))
-        cap = min(int(p.max_eject_frac * len(live)), len(live) - 1)
-        new = frozenset((stale + slow)[:max(cap, 0)])
+        stale_i = live_a[stale_m]
+        stale_i = stale_i[np.lexsort((stale_i, rt[stale_m]))]
+        slow = slow[np.lexsort((slow, self._ewma[slow]))]
+        cap = min(int(p.max_eject_frac * nlive), nlive - 1)
+        accused = [int(i) for i in stale_i] + [int(i) for i in slow]
+        new = frozenset(accused[:max(cap, 0)])
         old = self.ejected
         self.ejected = new
         return (tuple(sorted(new - old)), tuple(sorted(old - new)))

@@ -205,15 +205,30 @@ class Fleet:
                  obs=None, faults: Optional[FaultSchedule] = None,
                  health: Optional[HealthPolicy] = None,
                  hedge: Optional[HedgePolicy] = None,
-                 soa_fast_path: bool = True) -> None:
+                 soa_fast_path: bool = True,
+                 fast_path_coverage: str = "full",
+                 leap_fault_cap: int = 0) -> None:
         if not replicas:
             raise ValueError("fleet needs at least one replica")
-        # struct-of-arrays fast event loop (DESIGN.md 3): used when the
-        # control plane is quiet enough to prove bit-identity (no obs
-        # tracing, no faults, no health ejection, no hedging, and every
-        # replica is a real SimServeEngine); False forces the legacy
-        # single-heap loop - same observables either way
+        # struct-of-arrays fast event loop (DESIGN.md 3): used whenever
+        # bit-identity to the legacy single-heap loop is proven - which
+        # since PR 10 includes the fault plane, health ejection, hedging,
+        # and windows/flight observability; only span tracing (per-step
+        # engine hooks) and non-SimServeEngine replicas force the legacy
+        # loop.  False forces it too - same observables either way.
         self.soa_fast_path = soa_fast_path
+        # "full" (default) is the widest proven coverage above; "clean"
+        # restores the PR 9 gate (fast only when obs/faults/health/hedge
+        # are all off) for A/B bisection of the coverage extension itself
+        if fast_path_coverage not in ("full", "clean"):
+            raise ValueError("fast_path_coverage must be 'full' or "
+                             "'clean'")
+        self.fast_path_coverage = fast_path_coverage
+        # > 0 caps banked steps per leap on *limping* replicas (their
+        # cost model is about to swap back, so unbounded chains just get
+        # rolled back at the fault edge); 0 = uncapped.  Any value is
+        # bit-identical - banked steps are invisible.
+        self.leap_fault_cap = leap_fault_cap
         self.replicas = replicas
         self.router = router
         # one replica<->pod partition for router, controller, telemetry:
@@ -274,6 +289,10 @@ class Fleet:
         # the list routers actually see: identical OBJECT to _live_views
         # when health is off, a health-filtered copy otherwise
         self._route_views: List[ReplicaView] = self._live_views
+        # live_indices() as an intp array, maintained (health runs only)
+        # by _rebuild_live_views so the per-publish health evaluation
+        # never rescans the pool in Python
+        self._live_arr = np.zeros(0, dtype=np.intp)
         self._ran = False
 
     @property
@@ -294,7 +313,10 @@ class Fleet:
 
     def _rebuild_live_views(self) -> None:
         views = self.bus.views
-        self._live_views = [views[i] for i in self.live_indices()]
+        idxs = self.live_indices()
+        self._live_views = [views[i] for i in idxs]
+        if self.health is not None:
+            self._live_arr = np.array(idxs, dtype=np.intp)
         self._refilter_route_views()
 
     def _refilter_route_views(self) -> None:
@@ -526,12 +548,15 @@ class Fleet:
                 self._push(bus.next_publish_ms(t), "publish", idx)
                 self._pub_alive[idx] = True
 
-    def _health_tick(self, idx: int, t: float) -> None:
+    def _health_tick(self, idx: int, t: float) -> bool:
+        """Observe replica ``idx``'s fresh publish and re-evaluate the
+        ejected set; True when the routable pool changed (the fast loop
+        must rebuild its gauge mirror, like a scale event)."""
         h = self.health
         bus = self.bus
         h.observe(idx, bus.reports[idx], t)
-        live = [v.idx for v in self._live_views]
-        ejected, restored = h.evaluate(t, bus.reports, live)
+        ejected, restored = h.evaluate(t, bus.reports, self._live_arr,
+                                       report_t=bus.report_t)
         if ejected or restored:
             self._refilter_route_views()
             self.telemetry.on_eject(len(ejected), len(restored), t)
@@ -540,6 +565,8 @@ class Fleet:
                     self.obs.on_fault(j, t, "eject")
                 for j in restored:
                     self.obs.on_fault(j, t, "restore")
+            return True
+        return False
 
     def _fire_hedge(self, r: Request, t: float) -> None:
         """Issue a duplicate copy of a still-unfinished request onto a
@@ -628,15 +655,26 @@ class Fleet:
         # to one run's scale history.
         self.router.reset()
         self.topology.begin_run()
-        # fast-loop eligibility: every gate is a feature whose hooks read
-        # per-step state the SoA loop provably never produces (spans,
-        # fault pops, health ticks, hedge twins); autoscalers and the
-        # periodic bus are fine - the admin barrier bounds leaps at them
-        fast = (self.soa_fast_path and self.obs is None
-                and self.faults is None and self.health is None
-                and self.hedge is None
-                and all(isinstance(e, SimServeEngine)
-                        for e in self.replicas))
+        # fast-loop eligibility (DESIGN.md 3 coverage matrix): the only
+        # feature whose hooks read genuinely per-step state is span
+        # tracing (_EngineObs observes every decode step), so it - and
+        # engine subclasses the leap proofs don't cover - force the
+        # legacy loop.  Faults truncate chains at their edges, health
+        # and publishes sit behind the admin barrier, hedge twins ride
+        # the completion step, and windows close on event-time rolls;
+        # all proven bit-identical.  coverage="clean" restores the old
+        # everything-quiet gate for bisection.
+        if self.fast_path_coverage == "full":
+            fast = (self.soa_fast_path
+                    and (self.obs is None or self.obs.tracer is None)
+                    and all(isinstance(e, SimServeEngine)
+                            for e in self.replicas))
+        else:
+            fast = (self.soa_fast_path and self.obs is None
+                    and self.faults is None and self.health is None
+                    and self.hedge is None
+                    and all(isinstance(e, SimServeEngine)
+                            for e in self.replicas))
         self._heap = []
         self._abar = [] if fast else None
         self._seq = _Seq() if fast else itertools.count()
@@ -961,7 +999,12 @@ class Fleet:
             gp[i] = v.num_parked
             lim = v.active_limit
             glim[i] = np.nan if lim is None else lim
-        live = np.array(self.live_indices(), dtype=np.intp)
+        # the ROUTABLE set, not live_indices(): with health ejection on,
+        # route_soa must scan exactly the views the slow path's
+        # route(payload, _route_views) sees (same object when health is
+        # off or quiet, so clean runs are untouched)
+        live = np.array([v.idx for v in self._route_views],
+                        dtype=np.intp)
         alive = np.zeros(n, dtype=bool)
         alive[live] = True
         # partition with the router's topology when it carries one (the
@@ -1001,17 +1044,30 @@ class Fleet:
     def _run_fast(self, max_ms: float) -> ClusterResult:
         """Struct-of-arrays steady-state event loop.
 
-        Preconditions (gated in ``run()``): no obs tracing, no fault
-        plane, no health ejection, no hedging.  Per-replica next step
-        boundaries live in one float64 array (``nb``; inf = idle)
-        scanned with a cached vectorized argmin, so the heap sequences
-        only publish/scale/migrate events; each boundary asks its engine
-        to leap a whole steady-state chain (``step_leap``), bounded by
-        the admin-barrier mirror ``_abar`` so no control-plane read can
-        observe mid-chain state.  An arrival or migrant landing on a
-        mid-chain replica rolls the unobserved tail back
-        (``leap_truncate``) - integer-exact, so the trace stays
-        bit-identical to the per-step loop.
+        Precondition (gated in ``run()``): no span tracing.  Per-replica
+        next step boundaries live in one float64 array (``nb``; inf =
+        idle) scanned with a cached vectorized argmin, so the heap
+        sequences only publish/scale/migrate/fault/hedge events; each
+        boundary asks its engine to leap a whole steady-state chain
+        (``step_leap``), bounded by the admin-barrier mirror ``_abar``
+        so no control-plane read can observe mid-chain state.  An
+        arrival or migrant landing on a mid-chain replica rolls the
+        unobserved tail back (``leap_truncate``) - integer-exact, so
+        the trace stays bit-identical to the per-step loop.
+
+        Fault/hedge events are NOT abar barriers: chains bank straight
+        past them and the event performs a *targeted* truncation of its
+        victim's chain instead (steps starting at or after the edge see
+        post-edge cost/membership, exactly matching the per-step order
+        where the fault's setup-time sequence pops before any same-time
+        step event).  Limplock therefore bounds the leap horizon the
+        same way the HBM knee does - by ending chains early - and
+        ``leap_fault_cap`` optionally shortens limping chains up front.
+        Health runs at publish ticks (already admin-barriered) and
+        rebuilds the SoA mirror when the routable pool changes; windowed
+        metrics close on the same event-time rolls the slow loop uses
+        (window counters bucket by event time and gauges are
+        chain-invariant, so batched closes emit identical rows).
 
         Tie contract vs the legacy single-heap loop: arrivals win every
         time tie (legacy pops heap events only when strictly earlier);
@@ -1021,8 +1077,8 @@ class Fleet:
         equal-time boundaries of distinct replicas process in index
         order, observably commutative while the control plane is quiet
         (engines never read each other, and every cross-replica reader -
-        router gauges, publishes, scale ticks - sits at an arrival or
-        admin event, never between same-time steps)."""
+        router gauges, publishes, scale ticks, hedge resolution - sits
+        at an arrival or admin event, never between same-time steps)."""
         inf = float("inf")
         heap = self._heap
         abar = self._abar
@@ -1044,6 +1100,19 @@ class Fleet:
         work = self._work
         migrating = self._migrating
         pub_alive = self._pub_alive
+        # fault/health/hedge/obs locals: all None/False on a clean run,
+        # so the hot branches cost one comparison each and the clean
+        # trace stays bit-identical to PR 9's loop
+        obs = self.obs
+        next_roll = obs.next_roll if obs is not None else inf
+        hedge = self.hedge
+        hedge_on = hedge is not None
+        hedge_delay = hedge.delay_ms if hedge_on else 0.0
+        hedges = self._hedges
+        blackouts = self._blackouts or None
+        health = self.health
+        fault_cap = self.leap_fault_cap
+        limp_saved = self._limp_saved
 
         n = len(replicas)
         nb = np.full(n, inf)     # next step boundary per replica
@@ -1064,6 +1133,77 @@ class Fleet:
         # so both are loop-invariant everywhere else
         th = heap[0][0] if heap else inf
         ta = arrivals[0].arrive_ms if n_arr else inf
+
+        def resolve(done_list, t):
+            # fast-loop mirror of _resolve_hedges: first completion
+            # wins.  Cancelling a copy resident on a mid-chain replica
+            # truncates that chain first (the banked tail assumed the
+            # cancelled stream's membership; strict-< keeps the steps a
+            # per-step loop had already run), then cancels and kicks
+            # with the same leap machinery the arrival path uses.
+            nonlocal events, work, tn, imin, dirty
+            if not hedges:
+                return
+            for r in done_list:
+                reg = hedges.get(r.rid)
+                if reg is None:
+                    continue
+                for rec in reg["copies"]:
+                    obj, status = rec
+                    if obj is r:
+                        rec[1] = "done"
+                    elif status == "live":
+                        if obj.done_ms >= 0:
+                            rec[1] = "done"     # banked: both count
+                            continue
+                        j = obj.replica
+                        eng_j = (replicas[j]
+                                 if 0 <= j < len(replicas) else None)
+                        if eng_j is not None \
+                                and eng_j.requests.get(obj.rid) is obj:
+                            if nb[j] < inf and eng_j._leap is not None:
+                                e2, u2 = eng_j.leap_truncate(t)
+                                if u2:
+                                    events -= u2
+                                    sseq[j] -= u2
+                                    nb[j] = e2
+                                    if e2 < tn:
+                                        imin, tn = j, e2
+                                    elif j == imin:
+                                        dirty = True
+                            eng_j.cancel(obj.rid, t)
+                            rec[1] = "cancelled"
+                            self._cancelled_hedges += 1
+                            if obs is not None:
+                                obs.on_cancel(obj, j, t)
+                            if nb[j] == inf and not retired[j] \
+                                    and eng_j.active:
+                                end2, done2, k2 = eng_j.step_leap(
+                                    t, bank_le=max_ms,
+                                    end_le=abar[0] if abar else inf,
+                                    max_bank=(fault_cap if fault_cap
+                                              and j in limp_saved
+                                              else 0))
+                                seqc.n += k2
+                                sseq[j] = seqc.n - 1
+                                events += k2 - 1
+                                if end2 > t:
+                                    nb[j] = end2
+                                    work += 1
+                                    if end2 < tn:
+                                        imin, tn = j, end2
+                                    elif j == imin:
+                                        dirty = True
+                                if done2:
+                                    if obs is not None:
+                                        obs.on_completions(done2, j)
+                                    resolve(done2, t)
+                            if bus_live:
+                                ga[j] = len(eng_j.active)
+                                gp[j] = eng_j.admission.num_parked
+                        else:               # in KV transit somewhere
+                            rec[1] = "cancel_pending"
+
         while True:
             if dirty:
                 imin = int(nb.argmin())
@@ -1097,6 +1237,14 @@ class Fleet:
             if t > max_ms:
                 break
             events += 1
+            if t >= next_roll:
+                # windowed-metrics roll: counters bucket by event time
+                # and the gauge sample only reads chain-invariant state,
+                # so closing here - the first processed event at or past
+                # the boundary, same as the slow loop - emits identical
+                # rows even when a leap chain banked across the boundary
+                obs.roll(t)
+                next_roll = obs.next_roll
 
             if kind == 2:                           # step boundary
                 i = imin
@@ -1107,7 +1255,9 @@ class Fleet:
                 if eng.active and not retired[i]:
                     end, done, k = eng.step_leap(
                         t, bank_le=max_ms,
-                        end_le=abar[0] if abar else inf)
+                        end_le=abar[0] if abar else inf,
+                        max_bank=(fault_cap if fault_cap
+                                  and i in limp_saved else 0))
                     seqc.n += k
                     sseq[i] = seqc.n - 1
                     events += k - 1
@@ -1116,13 +1266,18 @@ class Fleet:
                         work += 1
                     else:
                         nb[i] = inf
-                    if done and bus_live:
-                        # gauges move only on a completion step (release,
-                        # work-conserve, periodic promote); a completion-
-                        # free step leaves both exactly as the slow path
-                        # would have left them
-                        ga[i] = len(eng.active)
-                        gp[i] = eng.admission.num_parked
+                    if done:
+                        if obs is not None:
+                            obs.on_completions(done, i)
+                        if hedge_on:
+                            resolve(done, t)
+                        if bus_live:
+                            # gauges move only on a completion step
+                            # (release, work-conserve, periodic promote);
+                            # a completion-free step leaves both exactly
+                            # as the slow path would have left them
+                            ga[i] = len(eng.active)
+                            gp[i] = eng.admission.num_parked
                 else:
                     nb[i] = inf
                 continue
@@ -1135,17 +1290,42 @@ class Fleet:
                 now = t
                 injected += 1
                 bus.arrivals += 1
-                pod_arrivals[payload.pod % topo_pods] += 1
+                p = payload.pod % topo_pods
+                pod_arrivals[p] += 1
+                if hedge_on:
+                    # same push order as the slow loop: the hedge event
+                    # takes its sequence number before the submit path
+                    # bulk-consumes the chain's
+                    self._push(t + hedge_delay, "hedge", payload)
+                    th = heap[0][0]
+                if obs is not None:
+                    obs.on_inject(payload, "arrive", t, p)
+                vlist = views
             else:                                   # heap event
                 t, hseq, hkind, payload = heappop(heap)
                 if hkind == "publish":
                     heappop(abar)
                     i = payload
                     if not retired[i]:
-                        bus.publish(i, t)
-                        rep = reports[i]
-                        ga[i] = rep.num_active
-                        gp[i] = rep.num_parked
+                        # a blacked-out replica keeps serving and keeps
+                        # its publish chain alive, but the bus never
+                        # hears from it: routers (and the SoA gauge
+                        # mirror) see the pre-blackout report aging
+                        if blackouts is None \
+                                or not _in_window(blackouts.get(i), t):
+                            bus.publish(i, t)
+                            rep = reports[i]
+                            ga[i] = rep.num_active
+                            gp[i] = rep.num_parked
+                            if obs is not None:
+                                obs.on_publish(i, t, rep)
+                            if health is not None \
+                                    and self._health_tick(i, t):
+                                # routable pool changed: rebuild the SoA
+                                # mirror like a scale event
+                                soa = self._soa_rebuild()
+                                ga, gp = soa.ga, soa.gp
+                                views = self._route_views
                         if work > 0:
                             self._work = work
                             self._push(bus.next_publish_ms(t),
@@ -1176,6 +1356,10 @@ class Fleet:
                                 if self.autoscaler else None)
                     if isinstance(decision, SimServeEngine):
                         decision = ScaleDecision(add=decision)
+                    if obs is not None:
+                        # record BEFORE applying: the snapshot must be
+                        # the pre-action state the controller read
+                        obs.on_scale(t, decision)
                     if decision is not None:
                         if decision.add is not None:
                             self._scale_out(decision.add, t, decision.pod)
@@ -1200,15 +1384,189 @@ class Fleet:
                         dirty = True
                     th = heap[0][0] if heap else inf
                     continue
+                if hkind == "fault":
+                    op, f = payload
+                    idx_f = f.replica
+                    if idx_f < n and op in ("limp_on", "limp_off",
+                                            "crash"):
+                        eng_f = replicas[idx_f]
+                        if nb[idx_f] < inf and eng_f._leap is not None:
+                            # fault edges are not abar barriers: the
+                            # victim's chain banked straight past the
+                            # edge, so roll back the not-yet-run tail -
+                            # steps starting at or after the edge must
+                            # see post-edge cost/membership, exactly as
+                            # in the per-step world where the fault's
+                            # setup-time sequence pops first
+                            e, u = eng_f.leap_truncate(t)
+                            if u:
+                                events -= u
+                                sseq[idx_f] -= u
+                                nb[idx_f] = e
+                                if e < tn:
+                                    imin, tn = idx_f, e
+                                elif idx_f == imin:
+                                    dirty = True
+                    self._work = work
+                    self._migrating = migrating
+                    # the crash path reads the legacy stepping mirrors
+                    # (done_t of the in-flight step): sync them from nb
+                    stepping = self._stepping
+                    step_end = self._step_end
+                    for j in range(n):
+                        b = nb[j]
+                        if b < inf:
+                            stepping[j] = True
+                            step_end[j] = float(b)
+                        else:
+                            stepping[j] = False
+                    self._apply_fault(op, f, t)
+                    work = self._work
+                    migrating = self._migrating
+                    if op in ("crash", "restart"):
+                        # pool membership (or a publish chain) changed:
+                        # rebuild the gauge mirror like a scale event
+                        soa = self._soa_rebuild()
+                        ga, gp = soa.ga, soa.gp
+                        views = self._route_views
+                    th = heap[0][0] if heap else inf
+                    continue
+                if hkind == "hedge":
+                    r = payload
+                    if r.done_ms < 0:
+                        # inline _fire_hedge on the fast machinery: same
+                        # registry bookkeeping, same plain route() call
+                        # on the same filtered views (route_soa cannot
+                        # apply - the candidate set excludes live-copy
+                        # hosts), leap-aware submit and kick
+                        reg = hedges.get(r.rid)
+                        issued = reg["issued"] if reg is not None else 0
+                        if issued < hedge.max_hedges:
+                            exclude = set()
+                            if reg is not None:
+                                for obj, status in reg["copies"]:
+                                    if status == "live":
+                                        exclude.add(obj.replica)
+                            else:
+                                exclude.add(r.replica)
+                            hviews = [v for v in views
+                                      if v.idx not in exclude]
+                            if hviews:
+                                twin = r.fresh()
+                                if reg is None:
+                                    reg = {"copies": [[r, "live"]],
+                                           "issued": 0}
+                                    hedges[r.rid] = reg
+                                reg["copies"].append([twin, "live"])
+                                reg["issued"] = issued + 1
+                                self._hedges_issued += 1
+                                if obs is not None:
+                                    obs.on_hedge(twin, t)
+                                j = route(twin, hviews)
+                                twin.replica = j
+                                eng_j = replicas[j]
+                                if nb[j] < inf \
+                                        and eng_j._leap is not None:
+                                    e, u, admitted = eng_j.leap_submit(
+                                        twin, t)
+                                    if u:
+                                        events -= u
+                                        sseq[j] -= u
+                                        nb[j] = e
+                                        if e < tn:
+                                            imin, tn = j, e
+                                        elif j == imin:
+                                            dirty = True
+                                else:
+                                    admitted = eng_j.submit(twin)
+                                if obs is not None:
+                                    obs.on_routed(twin, j, admitted, t)
+                                if nb[j] == inf and not retired[j] \
+                                        and eng_j.active:
+                                    end, done, k = eng_j.step_leap(
+                                        t, bank_le=max_ms,
+                                        end_le=abar[0] if abar else inf,
+                                        max_bank=(fault_cap if fault_cap
+                                                  and j in limp_saved
+                                                  else 0))
+                                    seqc.n += k
+                                    sseq[j] = seqc.n - 1
+                                    events += k - 1
+                                    if end > t:
+                                        nb[j] = end
+                                        work += 1
+                                        if end < tn:
+                                            imin, tn = j, end
+                                        elif j == imin:
+                                            dirty = True
+                                    if done:
+                                        if obs is not None:
+                                            obs.on_completions(done, j)
+                                        resolve(done, t)
+                                if bus_live:
+                                    ga[j] = len(eng_j.active)
+                                    gp[j] = eng_j.admission.num_parked
+                                if reg["issued"] < hedge.max_hedges:
+                                    self._push(t + hedge_delay,
+                                               "hedge", r)
+                    th = heap[0][0] if heap else inf
+                    continue
                 # migrate: a drained stream re-arrives at the router
                 th = heap[0][0] if heap else inf
                 work -= 1
                 now = t
                 migrating -= 1
+                vlist = views
+                if hedge_on:
+                    reg = hedges.get(payload.rid)
+                    rec = (next((c for c in reg["copies"]
+                                 if c[0] is payload), None)
+                           if reg is not None else None)
+                    if rec is not None:
+                        # a copy cancelled while its KV was in transit
+                        # is dropped here, at the re-arrival it was
+                        # racing toward
+                        if rec[1] == "cancel_pending":
+                            rec[1] = "cancelled"
+                            self._cancelled_hedges += 1
+                            if obs is not None:
+                                obs.on_cancel(payload, -1, t)
+                            continue
+                        # steer away from a resident twin (engines key
+                        # streams by rid), or fold into it when nowhere
+                        # collision-free remains
+                        occupied = set()
+                        for c in reg["copies"]:
+                            o = c[0]
+                            if o is payload or c[1] != "live":
+                                continue
+                            j = o.replica
+                            if 0 <= j < len(replicas) and \
+                                    replicas[j].requests.get(
+                                        payload.rid) is o:
+                                occupied.add(j)
+                        if occupied:
+                            kept = [v for v in vlist
+                                    if v.idx not in occupied]
+                            if kept:
+                                vlist = kept
+                            else:
+                                rec[1] = "cancelled"
+                                self._cancelled_hedges += 1
+                                if obs is not None:
+                                    obs.on_cancel(payload, -1, t)
+                                continue
+                if obs is not None:
+                    obs.on_inject(payload, "migrate", t,
+                                  payload.pod % topo_pods)
 
-            # shared submit path (arrive + migrate)
-            i = rsoa(payload, soa, views) if rsoa is not None \
-                else route(payload, views)
+            # shared submit path (arrive + migrate).  route_soa only
+            # applies to the unfiltered routable list (vlist is views);
+            # a hedge-steered migrant takes the same plain route() the
+            # slow loop would
+            i = (rsoa(payload, soa, vlist)
+                 if rsoa is not None and vlist is views
+                 else route(payload, vlist))
             payload.replica = i
             eng = replicas[i]
             if nb[i] < inf and eng._leap is not None:
@@ -1217,7 +1575,7 @@ class Fleet:
                 # request merely parks; a rollback > 0 (activation) owes
                 # the same event-count and push-sequence refunds a
                 # per-step loop would never have spent
-                e, u, _ = eng.leap_submit(payload, t)
+                e, u, admitted = eng.leap_submit(payload, t)
                 if u:
                     events -= u
                     sseq[i] -= u
@@ -1225,10 +1583,14 @@ class Fleet:
                     if e < tn:          # boundary moved earlier; the
                         imin, tn = i, e  # cached min can only improve
             else:
-                eng.submit(payload)
+                admitted = eng.submit(payload)
+            if obs is not None:
+                obs.on_routed(payload, i, admitted, t)
             if nb[i] == inf and eng.active:
                 end, done, k = eng.step_leap(
-                    t, bank_le=max_ms, end_le=abar[0] if abar else inf)
+                    t, bank_le=max_ms, end_le=abar[0] if abar else inf,
+                    max_bank=(fault_cap if fault_cap
+                              and i in limp_saved else 0))
                 seqc.n += k
                 sseq[i] = seqc.n - 1
                 events += k - 1
@@ -1239,6 +1601,11 @@ class Fleet:
                         imin, tn = i, end
                     elif i == imin:
                         dirty = True
+                if done:
+                    if obs is not None:
+                        obs.on_completions(done, i)
+                    if hedge_on:
+                        resolve(done, t)
             if bus_live:
                 ga[i] = len(eng.active)
                 gp[i] = eng.admission.num_parked
@@ -1275,7 +1642,9 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
               faults: Optional[FaultSchedule] = None,
               health: Optional[HealthPolicy] = None,
               hedge: Optional[HedgePolicy] = None,
-              soa_fast_path: bool = True) -> ClusterResult:
+              soa_fast_path: bool = True,
+              fast_path_coverage: str = "full",
+              leap_fault_cap: int = 0) -> ClusterResult:
     """One-call convenience wrapper used by benches, tests, and the CLI.
 
     ``router`` is a built ``Router`` or a policy name; a name is resolved
@@ -1303,9 +1672,14 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
     published gauges, so it needs a periodic bus to read.
     ``soa_fast_path`` forces the struct-of-arrays event loop off when
     False (A/B digest checks; the loops are bit-identical by contract).
+    ``fast_path_coverage`` ("full"/"clean") and ``leap_fault_cap``
+    thread through to ``Fleet`` - "clean" restores the PR 9 gate (the
+    fast loop only on obs/fault/health/hedge-free runs), the cap bounds
+    banked steps on limping replicas; both are bit-identical knobs.
     """
     cfg = cfg or FleetConfig()
-    if os.environ.get("REPRO_FAST_PATH", "").lower() in ("off", "0"):
+    env_fp = os.environ.get("REPRO_FAST_PATH", "").lower()
+    if env_fp in ("off", "0"):
         # global A/B kill switch (cluster_bench --fast-path off, CI digest
         # checks): every run through this chokepoint - including pooled
         # bench workers, which inherit the env - takes the per-step
@@ -1314,6 +1688,10 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
         soa_fast_path = False
         if cfg.leap_stepping:
             cfg = dataclasses.replace(cfg, leap_stepping=False)
+    elif env_fp == "clean":
+        # A/B the PR 10 coverage extension in isolation: fast loop on
+        # clean runs only, legacy calendar under obs/faults/health/hedge
+        fast_path_coverage = "clean"
     slo = slo or SLO()
     if health is not None and staleness_ms <= 0.0:
         raise ValueError("health ejection reads the periodic published "
@@ -1335,5 +1713,7 @@ def run_fleet(requests: List[Request], router: Union[Router, str],
                              season_period_ms=season_period_ms)
     fleet = Fleet(cfg.make_engines(), router, telem, autoscaler=scaler,
                   bus=bus, topology=topo, obs=obs, faults=faults,
-                  health=health, hedge=hedge, soa_fast_path=soa_fast_path)
+                  health=health, hedge=hedge, soa_fast_path=soa_fast_path,
+                  fast_path_coverage=fast_path_coverage,
+                  leap_fault_cap=leap_fault_cap)
     return fleet.run(requests, max_ms=max_ms)

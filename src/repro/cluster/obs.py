@@ -53,6 +53,8 @@ import dataclasses
 import json
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 __all__ = ["SPAN_SCHEMA", "FLIGHT_SCHEMA", "WINDOW_SCHEMA", "SPAN_EVENTS",
            "FLIGHT_KINDS", "SpanTracer", "FlightRecorder", "WindowedMetrics",
            "Observability", "detect_collapse_onset", "chrome_trace",
@@ -244,20 +246,36 @@ class WindowedMetrics:
     sampled at window close.  ``fleet_rows`` / ``replica_rows`` /
     ``pod_rows`` hold the closed windows in time order; the fleet rows
     are the schema ``cluster_bench --json`` and the windows CSV share.
+
+    Open-window accumulation is preallocated int64 numpy planes
+    (window x counter, window x replica x counter, window x pod x
+    counter), doubled on demand past ``prealloc_windows``; rows are
+    materialized as plain-int dicts at close, so the public schema -
+    and its JSON/CSV digests - is unchanged from the dict-of-dicts
+    representation this replaces.
     """
 
-    def __init__(self, window_ms: float, slo=None) -> None:
+    # column layouts: fleet = (arrivals, completed, slo_met, tokens,
+    # good_tokens, migrated); replica = (routed, completed, tokens,
+    # faults); pod = (arrivals, completed, slo_met, good_tokens)
+
+    def __init__(self, window_ms: float, slo=None,
+                 prealloc_windows: int = 256) -> None:
         if window_ms <= 0.0:
             raise ValueError("window_ms must be > 0")
+        if prealloc_windows < 1:
+            raise ValueError("prealloc_windows must be >= 1")
         self.window_ms = float(window_ms)
         self.slo = slo
+        self.prealloc_windows = int(prealloc_windows)
         self.fleet_rows: List[Dict[str, Any]] = []
         self.replica_rows: List[Dict[str, Any]] = []
         self.pod_rows: List[Dict[str, Any]] = []
         self._open = 0                       # lowest un-closed window index
-        self._fleet: Dict[int, Dict[str, int]] = {}
-        self._rep: Dict[int, Dict[int, Dict[str, int]]] = {}
-        self._pod: Dict[int, Dict[int, Dict[str, int]]] = {}
+        w = self.prealloc_windows
+        self._fa = np.zeros((w, 6), dtype=np.int64)
+        self._ra = np.zeros((w, 8, 4), dtype=np.int64)
+        self._pa = np.zeros((w, 4, 4), dtype=np.int64)
         self.totals: Dict[str, int] = {
             "arrivals": 0, "completed": 0, "slo_met": 0, "tokens": 0,
             "good_tokens": 0, "migrated": 0}
@@ -266,44 +284,79 @@ class WindowedMetrics:
     def _win(self, t_ms: float) -> int:
         return int(t_ms // self.window_ms)
 
+    def _grow(self, k: int, rep: int = -1, pod: int = -1) -> None:
+        """Double whichever plane dimension ``k``/``rep``/``pod`` outgrew."""
+        nw = self._fa.shape[0]
+        while k >= nw:
+            nw *= 2
+        nr = self._ra.shape[1]
+        while rep >= nr:
+            nr *= 2
+        np_ = self._pa.shape[1]
+        while pod >= np_:
+            np_ *= 2
+        if nw != self._fa.shape[0]:
+            fa = np.zeros((nw, 6), dtype=np.int64)
+            fa[:self._fa.shape[0]] = self._fa
+            self._fa = fa
+        if (nw, nr) != self._ra.shape[:2]:
+            ra = np.zeros((nw, nr, 4), dtype=np.int64)
+            ra[:self._ra.shape[0], :self._ra.shape[1]] = self._ra
+            self._ra = ra
+        if (nw, np_) != self._pa.shape[:2]:
+            pa = np.zeros((nw, np_, 4), dtype=np.int64)
+            pa[:self._pa.shape[0], :self._pa.shape[1]] = self._pa
+            self._pa = pa
+
     def on_arrival(self, t_ms: float, pod: int) -> None:
         k = self._win(t_ms)
-        _bump(self._fleet.setdefault(k, {}), "arrivals")
-        _bump(self._pod.setdefault(k, {}).setdefault(pod, {}), "arrivals")
+        if k >= self._fa.shape[0] or pod >= self._pa.shape[1]:
+            self._grow(k, pod=pod)
+        self._fa[k, 0] += 1
+        self._pa[k, pod, 0] += 1
         self.totals["arrivals"] += 1
 
     def on_routed(self, t_ms: float, replica: int) -> None:
         k = self._win(t_ms)
-        _bump(self._rep.setdefault(k, {}).setdefault(replica, {}), "routed")
+        if k >= self._ra.shape[0] or replica >= self._ra.shape[1]:
+            self._grow(k, rep=replica)
+        self._ra[k, replica, 0] += 1
 
     def on_migrate(self, t_ms: float) -> None:
-        _bump(self._fleet.setdefault(self._win(t_ms), {}), "migrated")
+        k = self._win(t_ms)
+        if k >= self._fa.shape[0]:
+            self._grow(k)
+        self._fa[k, 5] += 1
         self.totals["migrated"] += 1
 
     def on_fault(self, t_ms: float, replica: int) -> None:
         k = self._win(t_ms)
-        _bump(self._rep.setdefault(k, {}).setdefault(replica, {}),
-              "faults")
+        if k >= self._ra.shape[0] or replica >= self._ra.shape[1]:
+            self._grow(k, rep=replica)
+        self._ra[k, replica, 3] += 1
 
     def on_completion(self, r, replica: int, pod: int) -> None:
         k = self._win(r.done_ms)
         met = self.slo.met(r) if self.slo is not None else False
         gen = r.generated
-        f = self._fleet.setdefault(k, {})
-        _bump(f, "completed")
-        _bump(f, "tokens", gen)
-        rep = self._rep.setdefault(k, {}).setdefault(replica, {})
-        _bump(rep, "completed")
-        _bump(rep, "tokens", gen)
-        p = self._pod.setdefault(k, {}).setdefault(pod, {})
-        _bump(p, "completed")
+        if (k >= self._fa.shape[0] or replica >= self._ra.shape[1]
+                or pod >= self._pa.shape[1]):
+            self._grow(k, rep=replica, pod=pod)
+        f = self._fa[k]
+        f[1] += 1
+        f[3] += gen
+        rep = self._ra[k, replica]
+        rep[1] += 1
+        rep[2] += gen
+        p = self._pa[k, pod]
+        p[1] += 1
         self.totals["completed"] += 1
         self.totals["tokens"] += gen
         if met:
-            _bump(f, "slo_met")
-            _bump(f, "good_tokens", gen)
-            _bump(p, "slo_met")
-            _bump(p, "good_tokens", gen)
+            f[2] += 1
+            f[4] += gen
+            p[2] += 1
+            p[3] += gen
             self.totals["slo_met"] += 1
             self.totals["good_tokens"] += gen
 
@@ -325,18 +378,23 @@ class WindowedMetrics:
         by_pod: Dict[int, List[Dict[str, Any]]] = {}
         for g in gauges:
             by_pod.setdefault(g["pod"], []).append(g)
+        if k_last >= self._fa.shape[0]:
+            self._grow(k_last)
+        n_rep = self._ra.shape[1]
         for k in range(self._open, k_last + 1):
-            f = self._fleet.pop(k, {})
-            completed = f.get("completed", 0)
-            tokens = f.get("tokens", 0)
-            good = f.get("good_tokens", 0)
-            met = f.get("slo_met", 0)
+            # every value leaves the int64 planes as a Python int: the
+            # row schema (json.dumps / repr digests) predates numpy here
+            f = self._fa[k]
+            completed = int(f[1])
+            tokens = int(f[3])
+            good = int(f[4])
+            met = int(f[2])
             self.fleet_rows.append({
                 "window": k, "t_start_ms": k * w, "t_end_ms": (k + 1) * w,
-                "arrivals": f.get("arrivals", 0),
+                "arrivals": int(f[0]),
                 "completed": completed, "slo_met": met,
                 "tokens": tokens, "good_tokens": good,
-                "migrated": f.get("migrated", 0),
+                "migrated": int(f[5]),
                 "throughput_tok_s": tokens / dur_s,
                 "goodput_tok_s": good / dur_s,
                 "slo_attainment": met / max(1, completed),
@@ -344,32 +402,41 @@ class WindowedMetrics:
                 "cache_tokens": ctok,
                 "cache_hit_rate": chit / cask if cask else 0.0,
             })
-            reps = self._rep.pop(k, {})
+            reps = self._ra[k]
             for g in gauges:
-                c = reps.get(g["replica"], {})
+                ri = g["replica"]
+                c = reps[ri] if ri < n_rep else None
                 self.replica_rows.append({
-                    "window": k, "replica": g["replica"], "pod": g["pod"],
-                    "routed": c.get("routed", 0),
-                    "completed": c.get("completed", 0),
-                    "tokens": c.get("tokens", 0),
-                    "faults": c.get("faults", 0),
+                    "window": k, "replica": ri, "pod": g["pod"],
+                    "routed": int(c[0]) if c is not None else 0,
+                    "completed": int(c[1]) if c is not None else 0,
+                    "tokens": int(c[2]) if c is not None else 0,
+                    "faults": int(c[3]) if c is not None else 0,
                     "active": g["active"], "parked": g["parked"],
                     "active_limit": g["active_limit"],
                     "cache_tokens": g["cache_tokens"],
                     "cache_hit_rate": g["cache_hit_rate"],
                 })
-            pods = self._pod.pop(k, {})
-            for pod in sorted(set(by_pod) | set(pods)):
-                c = pods.get(pod, {})
+            # a pod appears in counters iff something arrived at or
+            # completed in it this window, so any-nonzero is exactly the
+            # legacy touched-pods dict-key set
+            pods = self._pa[k]
+            touched = set(int(i)
+                          for i in np.nonzero(pods.any(axis=1))[0])
+            n_pod = pods.shape[0]
+            for pod in sorted(set(by_pod) | touched):
+                c = pods[pod] if pod < n_pod else None
                 pg = by_pod.get(pod, [])
-                done_p = c.get("completed", 0)
+                done_p = int(c[1]) if c is not None else 0
+                met_p = int(c[2]) if c is not None else 0
                 self.pod_rows.append({
                     "window": k, "pod": pod,
-                    "arrivals": c.get("arrivals", 0),
+                    "arrivals": int(c[0]) if c is not None else 0,
                     "completed": done_p,
-                    "slo_met": c.get("slo_met", 0),
-                    "goodput_tok_s": c.get("good_tokens", 0) / dur_s,
-                    "slo_attainment": c.get("slo_met", 0) / max(1, done_p),
+                    "slo_met": met_p,
+                    "goodput_tok_s": (int(c[3]) if c is not None
+                                      else 0) / dur_s,
+                    "slo_attainment": met_p / max(1, done_p),
                     "replicas": len(pg),
                     "active": sum(g["active"] for g in pg),
                     "parked": sum(g["parked"] for g in pg),
@@ -432,10 +499,12 @@ class Observability:
     """
 
     def __init__(self, window_ms: float = 0.0, spans: bool = True,
-                 flight: bool = True, slo=None) -> None:
+                 flight: bool = True, slo=None,
+                 prealloc_windows: int = 256) -> None:
         self.tracer = SpanTracer() if spans else None
         self.recorder = FlightRecorder() if flight else None
-        self.metrics = (WindowedMetrics(window_ms, slo)
+        self.metrics = (WindowedMetrics(window_ms, slo,
+                                        prealloc_windows=prealloc_windows)
                         if window_ms > 0.0 else None)
         self.next_roll = float("inf")
         self._fleet = None

@@ -253,6 +253,12 @@ class SignalBus:
         self._rng = np.random.default_rng(seed)
         self.engines: List[SimServeEngine] = []
         self.reports: List[ReplicaReport] = []
+        # numpy mirror of reports[i].t_ms, maintained by register/publish.
+        # Invariant: report_t[i] == reports[i].t_ms always (reports are
+        # created in exactly those two places), so vectorized consumers
+        # (health staleness masks) read it in one gather instead of N
+        # attribute lookups per publish tick.
+        self.report_t = np.zeros(0, dtype=np.float64)
         self.views: List[ReplicaView] = []
         self._scan_n: List[int] = []      # completions already SLO-scanned
         self._slo_met: List[int] = []
@@ -274,6 +280,7 @@ class SignalBus:
         cls = _LiveReplicaView if self.live else ReplicaView
         self.views.append(cls(idx, self))
         self.reports.append(self._capture(idx, now_ms))
+        self.report_t = np.append(self.report_t, now_ms)
         return idx
 
     # -- publishing ----------------------------------------------------------
@@ -301,6 +308,7 @@ class SignalBus:
     def publish(self, idx: int, now_ms: float) -> None:
         """Capture replica ``idx``'s state; consumers see it from now on."""
         self.reports[idx] = self._capture(idx, now_ms)
+        self.report_t[idx] = now_ms
 
     def next_publish_ms(self, now_ms: float) -> float:
         """Schedule the publish after one at ``now_ms`` (period + jitter)."""

@@ -86,6 +86,7 @@ class PrefetchPipeline:
         self.lock = gcr_wrap(base_lock, promote_threshold=256) \
             if use_gcr else base_lock
         self.state = PipelineState(next_batch=start_at)
+        self._next_deliver = start_at
         self._stop = threading.Event()
         self._workers = [
             threading.Thread(target=self._worker, daemon=True)
@@ -118,18 +119,16 @@ class PrefetchPipeline:
     def __iter__(self) -> Iterator:
         self.start()
         # re-order: workers may finish out of order; deliver sequentially
+        # from the delivery cursor (start_at, advanced by prior iteration) -
+        # the first queue arrival need not be the lowest claimed index
         pending: Dict[int, Dict] = {}
-        expect = self.state.next_batch - len(pending)
-        expect = 0 if not self._started else expect
-        next_i = None
         while True:
             i, batch = self.q.get()
             pending[i] = batch
-            if next_i is None:
-                next_i = min(pending)
-            while next_i in pending:
-                yield next_i, pending.pop(next_i)
-                next_i += 1
+            while self._next_deliver in pending:
+                i = self._next_deliver
+                self._next_deliver += 1
+                yield i, pending.pop(i)
 
     def stop(self) -> None:
         self._stop.set()

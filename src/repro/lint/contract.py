@@ -100,6 +100,8 @@ CONTRACT: Contract = {
                 "health": "None",
                 "hedge": "None",
                 "soa_fast_path": "True",
+                "fast_path_coverage": "'full'",
+                "leap_fault_cap": "0",
             },
         },
         "knee_cost": {
@@ -331,6 +333,7 @@ CONTRACT: Contract = {
                 "spans": "True",
                 "flight": "True",
                 "slo": "None",
+                "prealloc_windows": "256",
             },
         },
     },

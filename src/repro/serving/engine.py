@@ -623,7 +623,8 @@ class SimServeEngine:
     # -- steady-state leap stepping (DESIGN.md 3) ---------------------------
     def step_leap(self, now: float, bank_lt: float = math.inf,
                   bank_le: float = math.inf,
-                  end_le: float = math.inf) -> tuple:
+                  end_le: float = math.inf,
+                  max_bank: int = 0) -> tuple:
         """One decode step, then bank as many *identical* follow-up steps
         as provably nothing can observe.  Returns ``(end_ms, finished,
         n_steps)``: ``end_ms`` is the boundary the next step event belongs
@@ -649,6 +650,12 @@ class SimServeEngine:
         admin event was pushed earlier, holds the smaller heap sequence,
         and therefore pops before the boundary's step event in the
         per-step world too - after every chained step is already banked).
+
+        ``max_bank`` > 0 caps the number of banked follow-ups.  Shorter
+        chains are invisible (banked steps are bit-identical whether they
+        ride one chain or several), so any cap value preserves
+        bit-identity; the fleet uses it to keep rollback work bounded on
+        replicas whose cost is about to change (limplock windows).
         """
         dt, done = self.step(now)
         self._leap = None
@@ -665,6 +672,8 @@ class SimServeEngine:
         k = fh[0][0] - self._nsteps - 1
         if k <= 0:
             return end, done, 1
+        if 0 < max_bank < k:
+            k = max_bank
         active = self.active
         n = len(active)
         cost = self.cost

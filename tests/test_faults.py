@@ -373,6 +373,6 @@ def test_estimator_forget_resets_history():
 
     est.observe(0, R(0.0, 0), 0.0)
     est.observe(0, R(100.0, 10), 100.0)
-    assert est._n.get(0) == 1
+    assert est.rate_samples(0) == 1
     est.forget(0)
-    assert 0 not in est._n and 0 not in est._ewma and 0 not in est._last
+    assert est.rate_samples(0) == 0 and not est.has_history(0)

@@ -28,9 +28,11 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from repro.cluster import (FleetConfig, WorkloadSpec, poisson, run_fleet,
-                           sessions)
-from repro.cluster.faults import FaultSchedule, Limplock
+from repro.cluster import (Fleet, FleetConfig, Observability, WorkloadSpec,
+                           make_router, poisson, run_fleet, sessions)
+from repro.cluster.faults import (Blackout, Crash, FaultSchedule,
+                                  HealthPolicy, HedgePolicy, Limplock)
+from repro.cluster.signals import SignalBus
 from repro.serving.engine import (PrefixCache, Request, SimServeEngine,
                                   StepCostModel, make_admission)
 
@@ -284,6 +286,172 @@ def test_fleet_ab_sessions_digest_fast_on_off():
             out.append(res)
     assert len({_digest(r) for r in out}) == 1
     assert out[0].completed == out[0].offered
+
+
+# ---------------------------------------------------------------------------
+# PR 10 coverage matrix: faults / health / hedge / windows through all four
+# path combinations (leap x SoA).  Every scenario must collapse to ONE
+# full-result digest (to_json covers completions, stats, per-replica
+# rollups, AND the window series), so any fast-loop shortcut that
+# perturbs a single float or count fails loudly here.
+# ---------------------------------------------------------------------------
+
+
+def _ab4(reqs, run_kw_fn, cfg_kw=None, active_limit=16):
+    """4-way A/B over (leap, soa).  ``run_kw_fn`` builds fresh kwargs per
+    run: fault plans are immutable but Observability is run-scoped."""
+    out = []
+    for leap in (True, False):
+        for soa in (True, False):
+            cfg = FleetConfig(n_replicas=4, admission="gcr",
+                              active_limit=active_limit, n_pods=2,
+                              leap_stepping=leap, **(cfg_kw or {}))
+            res = run_fleet([r.fresh() for r in reqs],
+                            make_router("gcr_aware", seed=1, n_pods=2),
+                            cfg, max_ms=60_000.0, staleness_ms=50.0,
+                            soa_fast_path=soa, **run_kw_fn())
+            out.append((leap, soa, res))
+    digests = {hashlib.sha256(r.to_json().encode()).hexdigest()
+               for _, _, r in out}
+    assert len(digests) == 1, [
+        (leap, soa,
+         hashlib.sha256(r.to_json().encode()).hexdigest()[:12])
+        for leap, soa, r in out]
+    return out[0][2]
+
+
+def _matrix_reqs():
+    return sessions(80.0, 1_200.0, SPEC, seed=11, think_ms=300.0)
+
+
+MATRIX = {
+    "limplock": dict(faults=FaultSchedule(
+        limplocks=[Limplock(1, 100.0, 600.0, factor=6.0)])),
+    "crash_restart": dict(faults=FaultSchedule(
+        crashes=[Crash(2, 300.0, restart_ms=800.0, policy="requeue")])),
+    "crash_lose": dict(faults=FaultSchedule(
+        crashes=[Crash(2, 300.0, restart_ms=800.0, policy="lose")])),
+    "blackout": dict(faults=FaultSchedule(
+        blackouts=[Blackout(0, 150.0, 700.0)])),
+    "hedge": dict(hedge=HedgePolicy(delay_ms=60.0, max_hedges=2)),
+    "health_eject": dict(
+        faults=FaultSchedule(
+            limplocks=[Limplock(0, 100.0, 900.0, factor=10.0)],
+            blackouts=[Blackout(0, 100.0, 900.0)]),
+        health=HealthPolicy(stale_ms=150.0)),
+    "everything": dict(
+        faults=FaultSchedule(
+            limplocks=[Limplock(1, 100.0, 600.0, factor=6.0)],
+            blackouts=[Blackout(0, 150.0, 700.0)],
+            crashes=[Crash(2, 300.0, restart_ms=800.0,
+                           policy="requeue")]),
+        health=HealthPolicy(stale_ms=150.0),
+        hedge=HedgePolicy(delay_ms=60.0, max_hedges=2)),
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(MATRIX))
+def test_fastpath_matrix_faults_health_hedge(scenario):
+    res = _ab4(_matrix_reqs(), lambda: dict(MATRIX[scenario]))
+    if scenario == "hedge" or scenario == "everything":
+        assert res.stats["hedges_issued"] >= 1
+    if scenario == "health_eject":
+        assert res.stats["ejections"] >= 1
+
+
+def test_fastpath_matrix_windows_only_obs():
+    """A windows-only bundle (spans off -> no tracer) keeps the fast
+    path; the emitted window series must be identical in all four path
+    combinations, faulted and clean."""
+    for extra in ({}, dict(MATRIX["everything"])):
+        res = _ab4(_matrix_reqs(),
+                   lambda e=extra: dict(
+                       obs=Observability(window_ms=100.0, spans=False),
+                       **e))
+        assert len(res.windows) >= 8
+        assert sum(w["completed"] for w in res.windows) == res.completed
+
+
+def test_fault_exactly_on_leaped_chain_boundary():
+    """Limplock edges at 8.0/24.0ms on the exact 4ms step grid: both
+    edges ARE banked chain boundaries.  The truncation walk must keep
+    every step strictly before the edge (u may be 0) and re-price the
+    boundary step with the post-edge cost - in all four combos."""
+    reqs = _grid_reqs(n_initial=8, gen_len=50)
+    faults = FaultSchedule(limplocks=[Limplock(0, 8.0, 24.0, factor=4.0)])
+    out = []
+    for leap in (True, False):
+        for soa in (True, False):
+            cfg = FleetConfig(n_replicas=4, admission="gcr",
+                              active_limit=2, n_pods=2, cost=EXACT_COST,
+                              leap_stepping=leap)
+            res = run_fleet([r.fresh() for r in reqs], "gcr_aware", cfg,
+                            max_ms=5_000.0, staleness_ms=8.0,
+                            soa_fast_path=soa, faults=faults)
+            out.append(res)
+    assert len({_digest(r) for r in out}) == 1
+    assert out[0].completed == out[0].offered
+
+
+def test_crash_mid_hedge():
+    """A replica dies while hedged copies are in flight: the registry
+    must resolve first-completion-wins against requeued copies
+    identically on both loops."""
+    res = _ab4(_matrix_reqs(),
+               lambda: dict(
+                   faults=FaultSchedule(crashes=[
+                       Crash(1, 150.0, restart_ms=600.0,
+                             policy="requeue")]),
+                   hedge=HedgePolicy(delay_ms=40.0, max_hedges=2)),
+               active_limit=8)
+    assert res.stats["hedges_issued"] >= 1
+    assert res.stats["crashes"] >= 1
+
+
+def test_leap_fault_cap_is_invisible():
+    """``leap_fault_cap`` bounds the banked-chain horizon while a
+    limplock is armed; any bound must be bit-identical (shorter chains
+    re-enter step_leap at the next boundary)."""
+    reqs = _matrix_reqs()
+    faults = FaultSchedule(
+        limplocks=[Limplock(1, 100.0, 600.0, factor=6.0)])
+    out = []
+    for cap in (0, 1, 4):
+        res = run_fleet([r.fresh() for r in reqs],
+                        make_router("gcr_aware", seed=1, n_pods=2),
+                        FleetConfig(n_replicas=4, admission="gcr",
+                                    active_limit=16, n_pods=2),
+                        max_ms=60_000.0, staleness_ms=50.0,
+                        faults=faults, leap_fault_cap=cap)
+        out.append(hashlib.sha256(res.to_json().encode()).hexdigest())
+    assert len(set(out)) == 1
+
+
+def test_fast_gate_coverage_full_vs_clean():
+    """coverage='full' keeps the SoA loop under faults + windowed obs;
+    coverage='clean' (the pre-PR-10 gate, kept for bisection) falls back
+    to the calendar loop.  ``_abar`` is allocated iff the fast loop ran."""
+    reqs = sessions(40.0, 600.0, SPEC, seed=3, think_ms=300.0)
+    faults = FaultSchedule(
+        limplocks=[Limplock(1, 100.0, 400.0, factor=4.0)])
+
+    def go(coverage):
+        cfg = FleetConfig(n_replicas=4, admission="gcr",
+                          active_limit=16, n_pods=2)
+        fleet = Fleet(cfg.make_engines(),
+                      make_router("gcr_aware", seed=1, n_pods=2),
+                      bus=SignalBus(period_ms=50.0), faults=faults,
+                      obs=Observability(window_ms=100.0, spans=False),
+                      fast_path_coverage=coverage)
+        fleet.run([r.fresh() for r in reqs], max_ms=60_000.0)
+        return fleet._abar is not None
+
+    assert go("full") is True
+    assert go("clean") is False
+    with pytest.raises(ValueError):
+        Fleet(FleetConfig().make_engines(),
+              make_router("gcr_aware", seed=1, n_pods=2),
+              fast_path_coverage="fast")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,88 @@
+"""perf_guard --check unit behavior (the gate logic, not the timings).
+
+Pins the cross-host downgrade contract: when the latest stamp's
+``host_fingerprint`` differs from this machine's, speed regressions
+soften to warnings - but the gate must SAY so and NAME the downgraded
+suites, never silently pass.  Structural failures (missing suites) stay
+hard either way.
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import perf_guard
+
+
+def _entry(fp, norm, label="base"):
+    return {
+        "stamp": 1, "label": label, "host_fingerprint": fp,
+        "suites": {
+            "fleet_demo": {"norm_events_per_calib": norm,
+                           "events_per_s": 100_000.0,
+                           "events": 1_000, "wall_s": 0.01},
+        },
+    }
+
+
+def _arm(monkeypatch, tmp_path, base_fp, got_fp, got_norm):
+    """Stub history + measurement so check() runs without benchmarks."""
+    baseline = tmp_path / "BENCH_cluster.json"
+    baseline.write_text("{}")
+    monkeypatch.setattr(perf_guard, "BASELINE_PATH", baseline)
+    monkeypatch.setattr(perf_guard, "load_history",
+                        lambda: [_entry(base_fp, 1000.0)])
+    monkeypatch.setattr(perf_guard, "verify_history", lambda h: [])
+    monkeypatch.setattr(perf_guard, "measure",
+                        lambda: _entry(got_fp, got_norm, label="live"))
+
+
+def test_cross_host_regression_downgrades_and_names_suites(
+        monkeypatch, tmp_path, capsys):
+    # 4x slower than baseline, but measured on a different host
+    _arm(monkeypatch, tmp_path, "hostA", "hostB", 250.0)
+    rc = perf_guard.check(factor=1.5)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert ("host_fingerprint mismatch (hostA vs hostB) downgraded "
+            "1 regression(s) to warnings") in out
+    assert "fleet_demo: 4.00x slower than baseline" in out
+    assert "FAIL" not in out
+
+
+def test_same_host_regression_stays_hard(monkeypatch, tmp_path, capsys):
+    _arm(monkeypatch, tmp_path, "hostA", "hostA", 250.0)
+    rc = perf_guard.check(factor=1.5)
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "perf_guard: FAIL" in out
+    assert "downgraded" not in out
+
+
+def test_cross_host_within_budget_is_quiet(monkeypatch, tmp_path, capsys):
+    _arm(monkeypatch, tmp_path, "hostA", "hostB", 900.0)
+    rc = perf_guard.check(factor=1.5)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "downgraded" not in out
+    assert "cross-host: warn-only speed gate" in out
+
+
+def test_missing_suite_fails_even_cross_host(monkeypatch, tmp_path,
+                                             capsys):
+    baseline = tmp_path / "BENCH_cluster.json"
+    baseline.write_text("{}")
+    monkeypatch.setattr(perf_guard, "BASELINE_PATH", baseline)
+    monkeypatch.setattr(perf_guard, "load_history",
+                        lambda: [_entry("hostA", 1000.0)])
+    monkeypatch.setattr(perf_guard, "verify_history", lambda h: [])
+    got = _entry("hostB", 1000.0, label="live")
+    got["suites"] = {}
+    monkeypatch.setattr(perf_guard, "measure", lambda: got)
+    rc = perf_guard.check(factor=1.5)
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "fleet_demo: suite missing from this build" in out
